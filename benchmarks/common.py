@@ -1,0 +1,127 @@
+"""Shared harness for the paper-figure benchmarks.
+
+All quality benchmarks run the paper's protocol at laptop scale on the
+clustered-bigram task (repro/data/synthetic.py): pretrain a dense
+checkpoint once (cached), then compare continuation strategies on extra
+budget. Trends — not absolute numbers — are the reproduction target; the
+paper's own numbers need TPU-weeks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, MoECfg, get_reduced
+from repro.checkpoint import CheckpointManager
+from repro.data import make_iterator
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.optim import adafactor, inverse_sqrt
+from repro.training.train_loop import init_train_state, make_train_step
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench_cache")
+PRETRAIN_STEPS = 300
+EVAL_OFFSET = 1_000_000
+
+
+def dense_base_cfg() -> ArchConfig:
+    return get_reduced("tinyllama-1.1b")
+
+
+def upcycled_cfg(base: ArchConfig, **moe_kwargs) -> ArchConfig:
+    kw = dict(num_experts=4, router="top_k", top_k=2, capacity_factor=2.0,
+              layer_pattern="every_other", group_size=64)
+    kw.update(moe_kwargs)
+    return dataclasses.replace(
+        base, name=base.name + "-upcycled", moe=MoECfg(**kw)
+    )
+
+
+def make_optimizer():
+    return adafactor(inverse_sqrt(peak=0.01, warmup_steps=50))
+
+
+def train(cfg, state, steps: int, *, start_step: int = 0,
+          global_batch: int = 16, seq_len: int = 64, ac=None):
+    opt = make_optimizer()
+    it = make_iterator(cfg, global_batch=global_batch, seq_len=seq_len,
+                       host_index=0, host_count=1)
+    it.restore({"step": start_step})
+    # no donation: callers reuse the input state (e.g. to branch dense
+    # continuation vs upcycling from one checkpoint)
+    step_fn = jax.jit(make_train_step(cfg, opt, ac=ac or zoo.ApplyCfg()))
+    for _ in range(steps):
+        state, mets = step_fn(state, next(it))
+    jax.block_until_ready(mets["loss"])
+    return state, mets
+
+
+def eval_loss(params, cfg, *, n_batches: int = 8, global_batch: int = 16,
+              seq_len: int = 64, ac=None) -> float:
+    it = make_iterator(cfg, global_batch=global_batch, seq_len=seq_len,
+                       host_index=0, host_count=1)
+    it.restore({"step": EVAL_OFFSET})
+    f = jax.jit(lambda p, b: zoo.loss_fn(p, b, cfg, ac=ac or zoo.ApplyCfg())[1]["ce"])
+    losses = [float(f(params, next(it))) for _ in range(n_batches)]
+    return float(np.mean(losses))
+
+
+def pretrained_dense_state(steps: int = PRETRAIN_STEPS):
+    """Train (or load the cached) dense base checkpoint."""
+    cfg = dense_base_cfg()
+    opt = make_optimizer()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    mgr = CheckpointManager(os.path.join(CACHE_DIR, "dense_base"),
+                            max_to_keep=1)
+    if mgr.latest_step() == steps:
+        restored, _, _ = mgr.restore_latest(state)
+        return cfg, restored
+    state, _ = train(cfg, state, steps)
+    mgr.save(steps, state)
+    return cfg, state
+
+
+def upcycle_state(dense_state, dense_cfg, sparse_cfg, *,
+                  resume_opt: bool = False, seed: int = 7):
+    """Params (+ optionally optimizer state) surgery -> sparse TrainState."""
+    from repro.core.upcycle import upcycle_opt_state, upcycle_params
+
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+    _, axes = pm.split(wrapped)
+    dw = pm.wrap(dense_state["params"], axes)
+    sw = upcycle_params(dw, dense_cfg, sparse_cfg, jax.random.PRNGKey(seed))
+    sparse_params, _ = pm.split(sw)
+    opt = make_optimizer()
+    opt_state = opt.init(sparse_params)
+    if resume_opt:
+        opt_state = upcycle_opt_state(
+            opt_state, dense_state["opt_state"], dense_cfg, sparse_cfg
+        )
+    return {
+        "params": sparse_params,
+        "opt_state": opt_state,
+        "step": dense_state["step"],
+    }
+
+
+def timed(fn: Callable, *args, n: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

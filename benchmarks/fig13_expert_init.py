@@ -1,0 +1,28 @@
+"""Paper Fig. 13 / §B.5: expert initialization — copying the dense MLP into
+every expert vs random expert init vs copy+noise (§B.9).
+
+Claim: at limited extra budget, copy > copy+noise ~= copy > random.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+
+
+def run(extra_steps: int = 150) -> list[tuple[str, float, str]]:
+    dense_cfg, dense_state = C.pretrained_dense_state()
+    rows = []
+    for name, kw in {
+        "copy": dict(expert_init="copy"),
+        "copy_noise": dict(expert_init="copy_noise", init_noise_std=0.01),
+        "random": dict(expert_init="random"),
+    }.items():
+        cfg = C.upcycled_cfg(dense_cfg, **kw)
+        st = C.upcycle_state(dense_state, dense_cfg, cfg)
+        ev0 = C.eval_loss(st["params"], cfg)
+        st, _ = C.train(cfg, st, extra_steps, start_step=C.PRETRAIN_STEPS)
+        ev = C.eval_loss(st["params"], cfg)
+        rows.append(
+            (f"fig13/{name}", 0.0,
+             f"eval_ce={ev:.4f} step0_ce={ev0:.4f}")
+        )
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 15 + §B.8: the initial drop at surgery time as a function of
+capacity factor and combine-weight renormalization.
+
+This is the exact mechanism check (no training): with renorm, the step-0
+gap to the dense model shrinks as C grows and hits ZERO once no token is
+dropped; without renorm, the gap persists.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common as C
+from repro.core.upcycle import upcycle_params
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+
+
+def run() -> list[tuple[str, float, str]]:
+    import jax
+
+    dense_cfg, dense_state = C.pretrained_dense_state()
+    base = C.eval_loss(dense_state["params"], dense_cfg)
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+    _, axes = pm.split(wrapped)
+    dw = pm.wrap(dense_state["params"], axes)
+
+    rows = []
+    for renorm in (True, False):
+        for c in (0.5, 1.0, 2.0, 4.0):
+            cfg = C.upcycled_cfg(
+                dense_cfg, capacity_factor=c,
+                normalize_combine_weights=renorm,
+            )
+            sw = upcycle_params(dw, dense_cfg, cfg, jax.random.PRNGKey(7))
+            sp, _ = pm.split(sw)
+            ev = C.eval_loss(sp, cfg)
+            rows.append((
+                f"fig15/renorm={renorm}_C={c}", 0.0,
+                f"step0_ce={ev:.4f} drop_vs_dense={ev - base:+.4f}",
+            ))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Fig. 2: upcycling vs dense continuation on extra budget.
+
+Claim: with non-trivial extra compute, the upcycled MoE beats continued
+dense training from the same checkpoint.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+
+
+def run(extra_steps: int = 200) -> list[tuple[str, float, str]]:
+    dense_cfg, dense_state = C.pretrained_dense_state()
+    base_eval = C.eval_loss(dense_state["params"], dense_cfg)
+    rows = []
+
+    # dense continuation
+    t0 = time.perf_counter()
+    dstate = {k: v for k, v in dense_state.items()}
+    dstate, _ = C.train(dense_cfg, dstate, extra_steps,
+                        start_step=C.PRETRAIN_STEPS)
+    d_eval = C.eval_loss(dstate["params"], dense_cfg)
+    d_us = (time.perf_counter() - t0) / extra_steps * 1e6
+
+    # upcycled continuation
+    sparse_cfg = C.upcycled_cfg(dense_cfg)
+    sstate = C.upcycle_state(dense_state, dense_cfg, sparse_cfg)
+    t0 = time.perf_counter()
+    sstate, _ = C.train(sparse_cfg, sstate, extra_steps,
+                        start_step=C.PRETRAIN_STEPS)
+    s_eval = C.eval_loss(sstate["params"], sparse_cfg)
+    s_us = (time.perf_counter() - t0) / extra_steps * 1e6
+
+    rows.append((
+        "fig2/dense_continuation", d_us,
+        f"eval_ce={d_eval:.4f} (ckpt={base_eval:.4f})",
+    ))
+    rows.append((
+        "fig2/upcycled", s_us,
+        f"eval_ce={s_eval:.4f} gain_vs_dense={d_eval - s_eval:+.4f}",
+    ))
+    return rows

@@ -1,0 +1,50 @@
+"""Paper Fig. 5: sparse upcycling vs dense upcycling (depth tiling).
+
+Claim: warm-starting a 2x-deeper dense model (Gopher-style depth tiling)
+gains over the checkpoint but underperforms the sparse upcycle.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.upcycle import depth_tile
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+
+
+def run(extra_steps: int = 200) -> list[tuple[str, float, str]]:
+    import jax
+
+    dense_cfg, dense_state = C.pretrained_dense_state()
+
+    sparse_cfg = C.upcycled_cfg(dense_cfg)
+    sstate = C.upcycle_state(dense_state, dense_cfg, sparse_cfg)
+    sstate, _ = C.train(sparse_cfg, sstate, extra_steps,
+                        start_step=C.PRETRAIN_STEPS)
+    up_eval = C.eval_loss(sstate["params"], sparse_cfg)
+
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+    _, axes = pm.split(wrapped)
+    dw = pm.wrap(dense_state["params"], axes)
+    tiled_wrapped, tiled_cfg = depth_tile(dw, dense_cfg, 2)
+    tiled_params, _ = pm.split(tiled_wrapped)
+    opt = C.make_optimizer()
+    tstate = {
+        "params": tiled_params,
+        "opt_state": opt.init(tiled_params),
+        "step": dense_state["step"],
+    }
+    tstate, _ = C.train(tiled_cfg, tstate, extra_steps,
+                        start_step=C.PRETRAIN_STEPS)
+    t_eval = C.eval_loss(tstate["params"], tiled_cfg)
+
+    n_sparse = pm.count_params(sstate["params"])
+    n_tiled = pm.count_params(tstate["params"])
+    return [
+        ("fig5/sparse_upcycled", 0.0,
+         f"eval_ce={up_eval:.4f} params={n_sparse}"),
+        (
+            "fig5/dense_depth_tiled", 0.0,
+            f"eval_ce={t_eval:.4f} params={n_tiled} "
+            f"sparse_lead={t_eval - up_eval:+.4f}",
+        ),
+    ]

@@ -1,0 +1,25 @@
+"""Paper Fig. 9 / §B.2: expert capacity factor sweep.
+
+Per-step quality rises with C; the paper's compute-time sweet spot is
+C = 2. We report eval CE and measured step time per C so the
+quality-per-time tradeoff is visible.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+
+
+def run(extra_steps: int = 120) -> list[tuple[str, float, str]]:
+    dense_cfg, dense_state = C.pretrained_dense_state()
+    rows = []
+    for c in (0.5, 1.0, 2.0, 4.0):
+        cfg = C.upcycled_cfg(dense_cfg, capacity_factor=c)
+        st = C.upcycle_state(dense_state, dense_cfg, cfg)
+        t0 = time.perf_counter()
+        st, _ = C.train(cfg, st, extra_steps, start_step=C.PRETRAIN_STEPS)
+        us = (time.perf_counter() - t0) / extra_steps * 1e6
+        ev = C.eval_loss(st["params"], cfg)
+        rows.append((f"fig9/capacity_C={c}", us, f"eval_ce={ev:.4f}"))
+    return rows

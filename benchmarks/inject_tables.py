@@ -1,0 +1,39 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md at the
+<!-- ROOFLINE_TABLES --> marker."""
+import io
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.dirname(__file__) + "/..")
+
+from benchmarks.make_tables import multipod_summary, table  # noqa: E402
+
+MARK = "<!-- ROOFLINE_TABLES -->"
+
+
+def main():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        print("### Single-pod baseline (paper-faithful profile)\n")
+        print(table("pod", "baseline"))
+        print("\n### Single-pod optimized (beyond-paper profile)\n")
+        print(table("pod", "optimized"))
+        ok, skip = multipod_summary()
+        print(
+            f"\nMulti-pod `(2,16,16)` mesh: **{ok} cells compiled OK**, "
+            f"{skip} skipped by the long_500k policy (the multi-pod pass "
+            "proves the `pod` axis shards; roofline terms reported "
+            "single-pod per the assignment)."
+        )
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    if MARK not in text:
+        raise SystemExit("marker not found")
+    text = text.replace(MARK, buf.getvalue())
+    open(path, "w").write(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks (CPU wall-time for the XLA paths; the Pallas
+kernels are TPU-targeted and validated for correctness in interpret mode —
+their perf effect is modeled in the roofline, benchmarks/roofline.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # expert FFN: XLA grouped einsum vs per-expert loop oracle
+    E, cap, d, f = 8, 256, 256, 512
+    ks = jax.random.split(key, 4)
+    xe = jax.random.normal(ks[0], (1, E, cap, d), jnp.float32)
+    wi = jax.random.normal(ks[1], (E, d, f)) * 0.05
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.05
+    wo = jax.random.normal(ks[3], (E, f, d)) * 0.05
+    fx = jax.jit(lambda x: ops.expert_ffn(x, wi, wg, wo, act="silu"))
+    us = timed(fx, xe, n=10)
+    flops = 1 * E * cap * (2 * d * f * 2 + 2 * f * d)
+    rows.append((
+        "kernels/expert_ffn_xla", us,
+        f"gflops_per_s={flops / us / 1e3:.2f}",
+    ))
+
+    # flash attention XLA chunked vs full-materialization reference
+    B, S, H, Kh, dh = 2, 1024, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Kh, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Kh, dh), jnp.float32)
+    ff = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, q_chunk=256, kv_chunk=256))
+    fr = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, implementation="ref"))
+    us_f = timed(ff, q, k, v, n=10)
+    us_r = timed(fr, q, k, v, n=10)
+    rows.append((
+        "kernels/flash_attention_xla", us_f,
+        f"vs_full_materialization={us_r / us_f:.2f}x",
+    ))
+
+    # rwkv6: chunked-parallel vs sequential scan
+    B, T, Hh, K = 1, 512, 8, 64
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, Hh, K)) * 0.5
+    kk = jax.random.normal(ks[1], (B, T, Hh, K)) * 0.5
+    vv = jax.random.normal(ks[2], (B, T, Hh, K)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, Hh, K))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (Hh, K)) * 0.3
+    fc = jax.jit(lambda *a: ops.rwkv6(*a, chunk=64)[0])
+    fs = jax.jit(lambda *a: ops.rwkv6(*a, implementation="ref")[0])
+    us_c = timed(fc, r, kk, vv, w, u, n=5)
+    us_s = timed(fs, r, kk, vv, w, u, n=5)
+    rows.append((
+        "kernels/rwkv6_chunked_xla", us_c,
+        f"vs_sequential_scan={us_s / us_c:.2f}x",
+    ))
+    return rows

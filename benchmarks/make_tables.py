@@ -1,0 +1,77 @@
+"""Render the EXPERIMENTS.md roofline tables from artifacts/dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    out = {}
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(f))
+        key = (d["arch"], d["shape"], d["mesh"], d["profile"],
+               d.get("tag", ""))
+        out[key] = d
+    return out
+
+
+def fmt(v):
+    return f"{v:.3f}"
+
+
+def table(mesh="pod", profile="baseline", tag=""):
+    data = load()
+    rows = []
+    archs = sorted({k[0] for k in data})
+    for arch in archs:
+        for shape in ORDER:
+            d = data.get((arch, shape, mesh, profile, tag))
+            if d is None:
+                continue
+            if d.get("status") == "skipped":
+                rows.append(
+                    f"| {arch} | {shape} | — | — | — | skipped:"
+                    f" {d['reason'].split(':')[0]} | — | — |"
+                )
+                continue
+            r = d["roofline"]
+            bound = r["step_time_lower_bound_s"]
+            frac = r["compute_s"] / bound if bound else 0
+            rows.append(
+                f"| {arch} | {shape} | {fmt(r['compute_s'])} |"
+                f" {fmt(r['memory_s'])} | {fmt(r['collective_s'])} |"
+                f" {r['dominant']} | {d['useful_flops_ratio']:.2f} |"
+                f" {frac:.3f} |"
+            )
+    hdr = (
+        "| arch | shape | compute (s) | memory (s) | collective (s) |"
+        " dominant | 6ND/HLO | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|"
+    )
+    return hdr + "\n" + "\n".join(rows)
+
+
+def multipod_summary():
+    data = load()
+    n_ok = sum(
+        1 for k, d in data.items()
+        if k[2] == "multipod" and d.get("status") == "ok"
+    )
+    n_skip = sum(
+        1 for k, d in data.items()
+        if k[2] == "multipod" and d.get("status") == "skipped"
+    )
+    return n_ok, n_skip
+
+
+if __name__ == "__main__":
+    print("### Single-pod baseline (paper-faithful profile)\n")
+    print(table("pod", "baseline"))
+    print("\n### Single-pod optimized (beyond-paper profile)\n")
+    print(table("pod", "optimized"))
+    ok, skip = multipod_summary()
+    print(f"\nmultipod: {ok} compiled OK, {skip} skipped by policy")

@@ -1,0 +1,55 @@
+"""Roofline report: aggregates the dry-run artifacts
+(artifacts/dryrun/*.json, produced by ``python -m repro.launch.dryrun``)
+into the per-(arch x shape x mesh) three-term table of EXPERIMENTS.md
+§Roofline.
+
+Terms are seconds per chip on TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s ICI link); dominant term = the bottleneck the perf loop attacks.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(pattern: str = "*") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(ART, f"{pattern}.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for d in load():
+        name = (
+            f"roofline/{d['arch']}.{d['shape']}.{d['mesh']}.{d['profile']}"
+        )
+        if d.get("tag"):
+            name += f".{d['tag']}"
+        if d.get("status") == "skipped":
+            rows.append((name, 0.0, f"SKIPPED: {d['reason']}"))
+            continue
+        r = d["roofline"]
+        bound = r["step_time_lower_bound_s"]
+        frac = r["compute_s"] / bound if bound else 0.0
+        rows.append((
+            name,
+            bound * 1e6,  # us per step lower bound
+            f"dom={r['dominant']} compute={r['compute_s']:.4f}s "
+            f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+            f"roofline_frac={frac:.3f} "
+            f"mf_ratio={d['useful_flops_ratio']:.2f} "
+            f"fits16G={d['memory']['fits_16g']}",
+        ))
+    if not rows:
+        rows.append((
+            "roofline/none", 0.0,
+            "no artifacts — run: PYTHONPATH=src python -m "
+            "repro.launch.dryrun --all",
+        ))
+    return rows

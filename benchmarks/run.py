@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV. Quality benchmarks reproduce the paper's comparisons at laptop
+# scale on the clustered-bigram task (trends, not absolute numbers);
+# roofline rows aggregate the multi-pod dry-run artifacts.
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "tab1_param_counts",
+    "fig15_initial_drop",
+    "fig2_upcycle_vs_dense",
+    "fig4_vs_scratch",
+    "fig5_depth_tiling",
+    "tab2_router_types",
+    "fig9_capacity",
+    "fig10_experts_layers",
+    "fig13_expert_init",
+    "kernels_micro",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module substrings to run")
+    args = ap.parse_args()
+    selected = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if selected and not any(s in mod_name for s in selected):
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

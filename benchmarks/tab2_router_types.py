@@ -1,0 +1,29 @@
+"""Paper Table 2 / Fig. 8: router-type comparison for upcycling.
+
+Expert Choice vs Top-2 (with and without BPR) vs Switch (Top-1), all
+upcycled from the same dense checkpoint. Encoder-style stack (the paper's
+EC results are in encoders; our LM testbed uses Top-K variants, and EC is
+compared on the ViT config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common as C
+
+
+def run(extra_steps: int = 150) -> list[tuple[str, float, str]]:
+    dense_cfg, dense_state = C.pretrained_dense_state()
+    rows = []
+    variants = {
+        "top2": dict(router="top_k", top_k=2, bpr=False),
+        "top2_bpr": dict(router="top_k", top_k=2, bpr=True),
+        "switch_top1": dict(router="switch", top_k=1),
+    }
+    for name, kw in variants.items():
+        cfg = C.upcycled_cfg(dense_cfg, **kw)
+        st = C.upcycle_state(dense_state, dense_cfg, cfg)
+        st, _ = C.train(cfg, st, extra_steps, start_step=C.PRETRAIN_STEPS)
+        ev = C.eval_loss(st["params"], cfg)
+        rows.append((f"tab2/{name}", 0.0, f"eval_ce={ev:.4f}"))
+    return rows

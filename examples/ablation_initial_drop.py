@@ -1,0 +1,64 @@
+"""Ablation driver: the paper's Figure 15 initial-drop experiment, live.
+
+    PYTHONPATH=src python examples/ablation_initial_drop.py
+
+Upcycles one dense checkpoint under a grid of (capacity factor x combine-
+weight renormalization) and prints the step-0 quality drop vs the dense
+model — the crispest mechanism in the paper: with renorm and enough
+capacity, the surgery is lossless.
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import MoECfg, get_reduced
+from repro.core.upcycle import upcycle_params
+from repro.data import make_iterator
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.optim import adafactor, inverse_sqrt
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def main():
+    dense_cfg = get_reduced("tinyllama-1.1b")
+    opt = adafactor(inverse_sqrt(peak=0.01, warmup_steps=50))
+    it = make_iterator(dense_cfg, global_batch=16, seq_len=64,
+                       host_index=0, host_count=1)
+    state = init_train_state(jax.random.PRNGKey(0), dense_cfg, opt)
+    step = jax.jit(make_train_step(dense_cfg, opt), donate_argnums=(0,))
+    print("== pretraining dense checkpoint (200 steps)")
+    for _ in range(200):
+        state, mets = step(state, next(it))
+    base = float(mets["ce"])
+    print(f"   dense CE {base:.4f}")
+
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+    _, axes = pm.split(wrapped)
+    dw = pm.wrap(state["params"], axes)
+    eval_batch = next(it)
+
+    dense_ce = float(
+        zoo.loss_fn(state["params"], eval_batch, dense_cfg)[1]["ce"]
+    )
+    print(f"\n{'C':>6} {'renorm':>7} {'step0 CE':>9} {'drop':>8}")
+    for renorm in (True, False):
+        for c in (0.5, 1.0, 2.0, 4.0):
+            cfg = dataclasses.replace(
+                dense_cfg, name="u",
+                moe=MoECfg(num_experts=4, router="top_k", top_k=2,
+                           capacity_factor=c, group_size=64,
+                           layer_pattern="every_other",
+                           normalize_combine_weights=renorm),
+            )
+            sw = upcycle_params(dw, dense_cfg, cfg, jax.random.PRNGKey(7))
+            sp, _ = pm.split(sw)
+            ce = float(zoo.loss_fn(sp, eval_batch, cfg)[1]["ce"])
+            print(f"{c:6.1f} {str(renorm):>7} {ce:9.4f} "
+                  f"{ce - dense_ce:+8.4f}")
+    print("\n(with renorm + drop-free capacity the drop is exactly 0 — "
+          "paper Fig. 15)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Checkpoint store (orbax is not in the environment).
+
+A checkpoint is a directory:
+    manifest.json  — tree structure, per-leaf {file, shape, dtype}, user
+                     metadata (step, config name, logical axes, data
+                     iterator state, rng), format version
+    <leaf>.npy     — one numpy file per leaf (host-local shard on
+                     multi-host; single host here)
+    COMMIT         — written last; a checkpoint without it is invalid
+                     (crash-consistency marker)
+
+Writes go to ``<dir>.tmp-<pid>`` then ``os.replace`` onto the final name —
+atomic on POSIX — so readers never observe partial checkpoints. Arrays are
+stored device-agnostic (plain numpy + logical axes); restore re-shards
+onto whatever mesh the restoring job uses, which is what makes restarts
+elastic (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import ml_dtypes  # jax dependency; registers bfloat16 & friends
+import numpy as np
+
+FORMAT_VERSION = 1
+
+# numpy's .npy format only round-trips builtin dtypes; extension dtypes
+# (bfloat16, fp8) are stored as a bit-identical unsigned view + the logical
+# dtype name in the manifest.
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][0])
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        jax.tree_util.keystr(p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return paths, leaves, treedef
+
+
+def save_tree(path: str, tree, *, metadata: Optional[dict] = None) -> None:
+    tmp = f"{path}.tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    paths, leaves, _ = _flatten(tree)
+    manifest = {
+        "version": FORMAT_VERSION,
+        "metadata": metadata or {},
+        "leaves": [],
+    }
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(leaf)
+        stored, dtype_name = _encode(arr)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), stored)
+        manifest["leaves"].append(
+            {"path": p, "file": fname, "shape": list(arr.shape),
+             "dtype": dtype_name}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def is_valid(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "COMMIT"))
+
+
+def load_metadata(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
+def load_tree(path: str, like: Any = None, *, shardings: Any = None):
+    """Load a checkpoint.
+
+    ``like``: a tree with the target structure (required — the manifest
+    stores flat paths, the treedef comes from the caller; this is also the
+    hook for structure validation). ``shardings``: optional matching tree
+    of NamedShardings for direct sharded device_put.
+    """
+    if not is_valid(path):
+        raise FileNotFoundError(f"no valid checkpoint at {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, like_leaves, treedef = _flatten(like)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra = set(by_path) - set(paths)
+        raise ValueError(
+            f"checkpoint structure mismatch: missing={sorted(missing)[:5]} "
+            f"extra={sorted(extra)[:5]}"
+        )
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(paths)
+    )
+    out = []
+    for p, like_leaf, shard in zip(paths, like_leaves, shard_leaves):
+        e = by_path[p]
+        arr = _decode(np.load(os.path.join(path, e["file"])), e["dtype"])
+        if tuple(arr.shape) != tuple(np.shape(like_leaf)):
+            raise ValueError(
+                f"shape mismatch at {p}: ckpt {arr.shape} vs "
+                f"expected {np.shape(like_leaf)}"
+            )
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

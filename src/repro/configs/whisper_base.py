@@ -1,0 +1,56 @@
+"""whisper-base [audio]: 6L d_model=512 8H d_ff=2048 vocab=51865.
+Encoder-decoder; conv frontend stubbed (precomputed frame embeddings).
+[arXiv:2212.04356; unverified]
+
+Enc-dec => the paper's T5 recipe applies verbatim when upcycling:
+Expert Choice routing in the encoder, Top-2 in the decoder.
+"""
+from repro.configs import ArchConfig, MoECfg, register
+
+FULL = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    structure="encoder_decoder",
+    n_layers=6,
+    n_encoder_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    gated_mlp=False,
+    act="gelu",
+    norm="layernorm",
+    pos_emb="sinusoidal",
+    frontend="frame",
+    source="arXiv:2212.04356; unverified",
+)
+
+REDUCED = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    structure="encoder_decoder",
+    n_layers=2,
+    n_encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    gated_mlp=False,
+    act="gelu",
+    norm="layernorm",
+    pos_emb="sinusoidal",
+    frontend="frame",
+)
+
+register(FULL, REDUCED)
+
+
+def upcycled(num_experts: int = 32) -> ArchConfig:
+    # Encoder uses Expert Choice; the MoE layer itself switches router by
+    # stack (see repro/models/encdec.py).
+    return FULL.with_moe(
+        MoECfg(num_experts=num_experts, router="expert_choice",
+               capacity_factor=2.0)
+    )

@@ -1,0 +1,166 @@
+"""The MoE layer: router + dispatch + expert FFN + combine.
+
+Two dispatch implementations:
+
+* ``einsum`` — paper-era GShard-style one-hot matmul dispatch/combine
+  (the *faithful baseline*; O(g * E * cap * d) extra FLOPs).
+* ``gather`` — index gather/scatter dispatch (optimized; O(E * cap * d)).
+
+Expert FFN compute goes through ``repro.kernels.ops.expert_ffn`` which
+selects XLA einsums (default; used for CPU tests and dry-run lowering) or
+the fused Pallas TPU kernel.
+
+Sharding: dispatched buffers (G, E, cap, d) are constrained to
+``_ expert cap embed`` — with experts on the ``model`` mesh axis this makes
+GSPMD insert the all-to-alls of the paper's "expert partitioning"
+(§A.4). When E doesn't divide the axis (grok), the constraint degrades to
+replicated-expert + tensor-parallel d_ff via the rules engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, MoECfg
+from repro.core import routing as R
+from repro.models import param as pm
+from repro.models.layers import activation
+from repro.sharding import ShardCtx, act
+
+
+def moe_init(rng, cfg: ArchConfig, moe: MoECfg, *, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, moe.num_experts
+    ks = jax.random.split(rng, 4)
+    experts = {
+        "wi": pm.dense(ks[0], (E, d, f), "expert embed mlp", dtype=dtype),
+        "wo": pm.dense(
+            ks[2], (E, f, d), "expert mlp embed", dtype=dtype, fan_in=f
+        ),
+    }
+    if cfg.gated_mlp:
+        experts["wg"] = pm.dense(
+            ks[1], (E, d, f), "expert embed mlp", dtype=dtype
+        )
+    return {
+        "router": R.router_init(ks[3], d, moe),
+        "experts": experts,
+    }
+
+
+def expert_ffn(experts, xe, cfg: ArchConfig, *, implementation="xla",
+               ctx: Optional[ShardCtx] = None):
+    """xe: (G, E, cap, d) -> (G, E, cap, d). Dispatches to kernels.ops.
+
+    Weights are constrained to their COMPUTE layout first: expert-resident
+    ("expert _ _", one FSDP-style gather per layer) when E divides the
+    `model` axis, else d_ff tensor-parallel. Without this GSPMD sometimes
+    prefers replicating the token buffers over gathering the weights —
+    ~4x more bytes at Jamba scale (EXPERIMENTS.md SPerf, jamba iteration 3).
+    """
+    from repro.kernels import ops
+
+    wi, wg, wo = experts["wi"], experts.get("wg"), experts["wo"]
+    if ctx is not None:
+        E = wi.shape[0]
+        model = dict(ctx.mesh.shape).get("model", 1)
+        if E % model == 0:
+            wi = act(ctx, wi, "expert _ _")
+            wo = act(ctx, wo, "expert _ _")
+            wg = act(ctx, wg, "expert _ _") if wg is not None else None
+        else:
+            wi = act(ctx, wi, "_ _ mlp")
+            wo = act(ctx, wo, "_ mlp _")
+            wg = act(ctx, wg, "_ _ mlp") if wg is not None else None
+    return ops.expert_ffn(
+        xe, wi, wg, wo,
+        act=cfg.act,
+        implementation=implementation,
+    )
+
+
+def _group(x2d: jax.Array, group_size: int):
+    n, d = x2d.shape
+    g = min(group_size, n)
+    pad = (-n) % g
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d.reshape(-1, g, d), n, pad
+
+
+def moe_apply(
+    params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    moe: MoECfg,
+    *,
+    router_kind: Optional[str] = None,
+    dispatch: str = "gather",
+    ctx: Optional[ShardCtx] = None,
+    implementation: str = "xla",
+):
+    """x: (B, S, d) or (N, d). Returns (y, metrics dict)."""
+    router_kind = router_kind or moe.router
+    orig_shape = x.shape
+    x2d = x.reshape(-1, x.shape[-1])
+    xg, n, pad = _group(x2d, moe.group_size)
+    G, g, d = xg.shape
+
+    logits = jnp.einsum(
+        "Ggd,de->Gge", xg, params["router"]["w"],
+        preferred_element_type=jnp.float32,
+    )
+    r = R.route(logits, moe, router_kind)
+    cap = r.token_idx.shape[-1]
+
+    if dispatch == "einsum":
+        # One-hot dispatch/combine (GShard-era faithful path).
+        oh = jax.nn.one_hot(r.token_idx, g + 1, dtype=xg.dtype)[..., :g]
+        # (G, E, cap, g) x (G, g, d) -> (G, E, cap, d)
+        xe = jnp.einsum("Gect,Gtd->Gecd", oh, xg)
+        xe = act(ctx, xe, "batch expert cap embed")
+        ye = expert_ffn(params["experts"], xe, cfg,
+                        implementation=implementation, ctx=ctx)
+        ye = act(ctx, ye, "batch expert cap embed")
+        comb = oh * r.combine[..., None].astype(xg.dtype)
+        y = jnp.einsum("Gect,Gecd->Gtd", comb, ye)
+    elif dispatch == "gather":
+        safe_idx = jnp.minimum(r.token_idx, g - 1)
+        gi = jnp.broadcast_to(
+            jnp.arange(G)[:, None, None], r.token_idx.shape
+        )
+        xe = xg[gi, safe_idx]  # (G, E, cap, d)
+        valid = (r.token_idx < g)[..., None].astype(xg.dtype)
+        xe = xe * valid
+        xe = act(ctx, xe, "batch expert cap embed")
+        ye = expert_ffn(params["experts"], xe, cfg,
+                        implementation=implementation, ctx=ctx)
+        # Combine. Resharding ye from expert-sharded to hidden-sharded
+        # BEFORE the scatter makes GSPMD emit a (tokens*k*d/E)-sized
+        # all-to-all and a shard-local scatter, instead of partial-summing
+        # the full (G, g, d) token buffer with an all-reduce per layer
+        # (~E/k * 2 more bytes; see EXPERIMENTS.md SPerf jamba iteration).
+        ye = act(ctx, ye, "batch _ cap mlp")
+        w = (r.combine[..., None] * valid).astype(ye.dtype)
+        yw = (ye * w).astype(xg.dtype)
+        y = jnp.zeros((G, g + 1, d), xg.dtype)
+        y = act(ctx, y, "batch seq mlp")
+        y = y.at[gi, r.token_idx].add(yw)
+        y = act(ctx, y, "batch seq mlp")
+        y = y[:, :g]
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:n]
+    y = y.reshape(orig_shape).astype(x.dtype)
+
+    metrics = {
+        "aux_loss": r.aux_loss * moe.aux_loss_weight,
+        "z_loss": r.z_loss * moe.z_loss_weight,
+        "dropped_frac": r.dropped_frac,
+        "router_prob_mean_max": r.probs.max(-1).mean(),
+    }
+    return y, metrics

@@ -1,0 +1,232 @@
+"""The sparse-upcycling surgery (paper §3, Figure 1).
+
+``upcycle_params`` maps a trained dense checkpoint onto the sparse target
+architecture: every parameter is copied verbatim except the MLPs of layers
+that become MoE, which are *replicated into each expert*; routers are new,
+randomly initialized (normal, std 0.02, §A.1.1).
+
+``upcycle_opt_state`` optionally carries the dense optimizer slots across
+(vision recipe, §B.6): slot arrays for tiled MLP weights are broadcast over
+the new expert dim; router slots stay fresh (footnote 6).
+
+``depth_tile`` implements the paper's *dense upcycling* baseline (Fig. 5,
+following Gopher): warm-start a deeper dense model by replicating blocks.
+
+All functions operate on *wrapped* trees (repro.models.param.Param) so
+logical sharding axes are transformed alongside values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, MoECfg
+from repro.core.routing import router_init
+from repro.models import param as pm
+from repro.models import stack as stk
+
+
+def _is_param(x):
+    return isinstance(x, pm.Param)
+
+
+def _tile_expert(prm: pm.Param, num_experts: int, *, rng=None,
+                 noise_std: float = 0.0) -> pm.Param:
+    v = jnp.broadcast_to(prm.value, (num_experts,) + prm.value.shape)
+    if noise_std and rng is not None:
+        v = v + noise_std * jax.random.normal(rng, v.shape, v.dtype)
+    return pm.Param(v, ("expert " + prm.axes).strip())
+
+
+def _expand_ffn(
+    dense_ffn,
+    cfg: ArchConfig,
+    moe: MoECfg,
+    rng,
+):
+    """Dense MLP params {wi[,wg],wo} -> MoE params {router, experts}."""
+    kr, kn, ke = jax.random.split(rng, 3)
+    if moe.expert_init == "random":
+        # Ablation §B.5: experts from scratch.
+        from repro.core.moe import moe_init
+
+        fresh = moe_init(ke, cfg, moe)
+        experts = fresh["experts"]
+    else:
+        noise = moe.init_noise_std if moe.expert_init == "copy_noise" else 0.0
+        experts = {
+            k: _tile_expert(
+                v, moe.num_experts,
+                rng=jax.random.fold_in(kn, i), noise_std=noise,
+            )
+            for i, (k, v) in enumerate(sorted(dense_ffn.items()))
+        }
+    return {"router": router_init(kr, cfg.d_model, moe), "experts": experts}
+
+
+def _map_stack(
+    dense_stack,
+    dense_descs,
+    target_descs,
+    cfg: ArchConfig,
+    moe: MoECfg,
+    rng,
+):
+    if len(dense_descs) != len(target_descs):
+        raise ValueError(
+            f"layer count mismatch: dense {len(dense_descs)} vs "
+            f"target {len(target_descs)}"
+        )
+    layers = stk.unstack_layers(dense_stack, dense_descs)
+    out = []
+    for l, (dl, dd, td) in enumerate(zip(layers, dense_descs, target_descs)):
+        if dd.mixer != td.mixer or dd.cross != td.cross:
+            raise ValueError(f"layer {l}: incompatible descs {dd} vs {td}")
+        new = dict(dl)
+        if td.ffn == "moe" and dd.ffn == "dense":
+            new["ffn"] = _expand_ffn(
+                dl["ffn"], cfg, moe, jax.random.fold_in(rng, l)
+            )
+        elif td.ffn != dd.ffn:
+            raise ValueError(f"layer {l}: cannot map {dd.ffn} -> {td.ffn}")
+        out.append(new)
+    return stk.restack_layers(out, target_descs)
+
+
+def upcycle_params(
+    dense_params,
+    dense_cfg: ArchConfig,
+    target_cfg: ArchConfig,
+    rng,
+):
+    """Dense wrapped param tree -> sparse wrapped param tree (Figure 1)."""
+    moe = target_cfg.moe
+    if moe is None:
+        raise ValueError("target config has no MoE section")
+    out = dict(dense_params)
+    out["stack"] = _map_stack(
+        dense_params["stack"],
+        stk.layer_descs(dense_cfg, stack="decoder"),
+        stk.layer_descs(target_cfg, stack="decoder"),
+        target_cfg, moe, jax.random.fold_in(rng, 0),
+    )
+    if target_cfg.structure == "encoder_decoder":
+        out["encoder"] = _map_stack(
+            dense_params["encoder"],
+            stk.layer_descs(dense_cfg, stack="encoder"),
+            stk.layer_descs(target_cfg, stack="encoder"),
+            target_cfg, moe, jax.random.fold_in(rng, 1),
+        )
+    return out
+
+
+def _unstack_values(stack_tree, descs):
+    """Like stack.unstack_layers but for plain value trees (slot dicts)."""
+    segs = stk.find_segments(descs)
+    layers = []
+    for si, (reps, pdescs) in enumerate(segs):
+        seg = stack_tree["segments"][si]
+        for r in range(reps):
+            for i in range(len(pdescs)):
+                layers.append(
+                    jax.tree.map(lambda v, r=r: v[r], seg[f"pos{i}"])
+                )
+    return layers
+
+
+def _restack_values(layers, descs):
+    segs = stk.find_segments(descs)
+    out = []
+    it = iter(layers)
+    for reps, pdescs in segs:
+        per_pos = {f"pos{i}": [] for i in range(len(pdescs))}
+        for _ in range(reps):
+            for i in range(len(pdescs)):
+                per_pos[f"pos{i}"].append(next(it))
+        out.append(
+            {
+                k: jax.tree.map(lambda *vs: jnp.stack(vs), *v)
+                for k, v in per_pos.items()
+            }
+        )
+    return {"segments": out}
+
+
+def upcycle_opt_state(
+    sparse_fresh_state,
+    dense_state,
+    dense_cfg: ArchConfig,
+    target_cfg: ArchConfig,
+):
+    """Carry dense optimizer slots into the upcycled model (§B.6).
+
+    ``sparse_fresh_state``: optimizer.init(upcycled_params) — provides the
+    target structure; router slots keep their fresh values (paper
+    footnote 6: the router has no dense counterpart). Slot arrays of MLPs
+    that became experts are broadcast over the new leading expert dim —
+    Adafactor factors over the LAST two dims, so a dense (d,) v_row tiles
+    to (E, d) exactly (this is why optimizer-state upcycling is a pure
+    broadcast with our factoring convention).
+    """
+    out = dict(sparse_fresh_state)
+    out["slots"] = dict(sparse_fresh_state["slots"])
+    dense_slots = dense_state["slots"]
+
+    # Non-stack subtrees: copy verbatim (structures match).
+    for key in dense_slots:
+        if key in ("stack", "encoder"):
+            continue
+        out["slots"][key] = dense_slots[key]
+
+    def map_stack(stack_key: str, which: str):
+        ddescs = stk.layer_descs(dense_cfg, stack=which)
+        tdescs = stk.layer_descs(target_cfg, stack=which)
+        dlayers = _unstack_values(dense_slots[stack_key], ddescs)
+        flayers = _unstack_values(
+            sparse_fresh_state["slots"][stack_key], tdescs
+        )
+        merged = []
+        for dl, fl, dd, td in zip(dlayers, flayers, ddescs, tdescs):
+            new = dict(dl)
+            if td.ffn == "moe" and dd.ffn == "dense":
+                E = target_cfg.moe.num_experts
+                experts = jax.tree.map(
+                    lambda v: jnp.broadcast_to(v, (E,) + v.shape),
+                    dl["ffn"],
+                )
+                new["ffn"] = {
+                    "router": fl["ffn"]["router"],  # fresh
+                    "experts": experts,
+                }
+            merged.append(new)
+        return _restack_values(merged, tdescs)
+
+    out["slots"]["stack"] = map_stack("stack", "decoder")
+    if "encoder" in dense_slots:
+        out["slots"]["encoder"] = map_stack("encoder", "encoder")
+    # keep the dense step counter: the paper continues the LR schedule
+    # where the dense checkpoint left off (§4.1).
+    out["step"] = dense_state["step"]
+    return out
+
+
+def depth_tile(dense_params, dense_cfg: ArchConfig, factor: int):
+    """Dense upcycling / depth tiling baseline (Fig. 5; Rae et al. 2021).
+
+    Returns (tiled wrapped params, deeper ArchConfig). Tiling pattern:
+    whole-network replication [L1..Ln, L1..Ln, ...].
+    """
+    descs = stk.layer_descs(dense_cfg, stack="decoder")
+    layers = stk.unstack_layers(dense_params["stack"], descs)
+    target_cfg = dataclasses.replace(
+        dense_cfg,
+        n_layers=dense_cfg.n_layers * factor,
+        name=f"{dense_cfg.name}-depth{factor}x",
+    )
+    tdescs = stk.layer_descs(target_cfg, stack="decoder")
+    out = dict(dense_params)
+    out["stack"] = stk.restack_layers(layers * factor, tdescs)
+    return out, target_cfg

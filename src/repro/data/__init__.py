@@ -1,0 +1,7 @@
+from repro.data.pipeline import DataIterator, make_iterator  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    ClusteredBigramTask,
+    lm_batch,
+    patch_batch,
+    span_corruption_batch,
+)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per kernel (see EXAMPLE.md):
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrappers with implementation={xla,pallas,ref}
+  ref.py    — pure-jnp oracles used by the allclose test sweeps
+
+Kernels: expert_mlp (fused grouped expert FFN — the MoE hot-spot the paper
+sparsifies), flash_attention (32k prefill), rwkv6_kernel (WKV6 chunked scan
+for the assigned SSM arch).
+"""

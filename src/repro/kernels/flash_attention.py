@@ -1,0 +1,134 @@
+"""Flash attention Pallas TPU kernel (GQA, causal, cache-length masked).
+
+Online-softmax forward over KV tiles: grid (B, H, Sq/bq, Skv/bk), kv
+innermost. Running (m, l, acc) live in VMEM scratch persisting across kv
+iterations; the output tile is written once at the last kv step. Score
+tiles (bq x bk) never leave VMEM — this is precisely the HBM-traffic term
+the XLA fallback pays (see EXPERIMENTS.md §Perf).
+
+Tiles default to (bq, bk) = (512, 512): VMEM per step =
+q(512*dh) + k/v(2*512*dh) + s/p(2*512*512*4B=2MB) + acc(512*dh*4B)
+≈ 3 MB at dh=128 — MXU-aligned, triple-bufferable by the pipeline.
+
+GQA is handled in the index map: query head h reads kv head h // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, qoff_ref, kvlen_ref, o_ref,
+            m_acc, l_acc, acc, *, scale: float, causal: bool,
+            bq: int, bk: int, nk: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, :, 0, :]  # (bq, dh)
+    k = k_ref[0, :, 0, :]  # (bk, dh)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (bq, bk)
+
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kv_pos < kvlen_ref[0]
+    if causal:
+        q_pos = (
+            qoff_ref[0] + qi * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        )
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_acc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    m_acc[...] = m_new
+    l_acc[...] = l_acc[...] * alpha + p.sum(axis=-1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l = l_acc[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
+    bq: int = 512, bk: int = 512, interpret: bool = False,
+):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, Kh, dh). GQA: H % Kh == 0."""
+    B, Sq, H, dh = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pq, pk = (-Sq) % bq, (-Skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sqp, Skvp = Sq + pq, Skv + pk
+    nq, nk = Sqp // bq, Skvp // bk
+    if kv_len is None:
+        kv_len = Skv
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    q_offset = jnp.asarray(q_offset, jnp.int32).reshape(1)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=dh ** -0.5, causal=causal, bq=bq, bk=bk, nk=nk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec(
+                (1, bk, 1, dh), lambda b, h, qi, ki: (b, ki, h // G, 0)
+            ),
+            pl.BlockSpec(
+                (1, bk, 1, dh), lambda b, h, qi, ki: (b, ki, h // G, 0)
+            ),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bq, 1, dh), lambda b, h, qi, ki: (b, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_offset, kv_len)
+    if pq:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,173 @@
+"""Public kernel entry points (the ``ops.py`` jit'd wrappers).
+
+Every op takes ``implementation``:
+
+* ``"xla"``     — jnp einsum / chunked-scan path. Used on CPU, for dry-run
+                  lowering, and as the production fallback.
+* ``"pallas"``  — the Pallas TPU kernel (pl.pallas_call with BlockSpec VMEM
+                  tiling). On CPU it runs in interpret mode for validation.
+* ``"ref"``     — the pure-jnp oracle from ref.py.
+
+The default is "xla" so the whole framework runs identically on CPU; launch
+configs flip perf-critical call-sites to "pallas" on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+INTERPRET_DEFAULT = jax.default_backend() == "cpu"
+
+
+def expert_ffn(xe, wi, wg, wo, *, act: str = "silu", implementation="xla"):
+    """Grouped expert FFN. xe: (G, E, cap, d) or (E, cap, d)."""
+    if implementation == "ref":
+        return _ref.expert_ffn_ref(xe, wi, wg, wo, act=act)
+    if implementation == "pallas":
+        from repro.kernels import expert_mlp
+
+        squeeze = xe.ndim == 3
+        if squeeze:
+            xe = xe[None]
+        G, E, cap, d = xe.shape
+        y = jax.vmap(
+            lambda x: expert_mlp.expert_ffn_pallas(
+                x, wi, wg, wo, act=act, interpret=INTERPRET_DEFAULT
+            )
+        )(xe)
+        return y[0] if squeeze else y
+    # XLA path: plain einsums; GSPMD shards them across expert/model axes.
+    from repro.models.layers import activation
+
+    h = jnp.einsum("...ecd,edf->...ecf", xe, wi)
+    if wg is not None:
+        g = jnp.einsum("...ecd,edf->...ecf", xe, wg)
+        h = activation(act)(h) * g
+    else:
+        h = activation(act)(h)
+    return jnp.einsum("...ecf,efd->...ecd", h, wo).astype(xe.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal=True, q_offset=0, kv_len=None,
+    q_chunk=1024, kv_chunk=1024, implementation="xla",
+):
+    if implementation == "ref":
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len
+        )
+    if implementation == "pallas":
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention_pallas(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            interpret=INTERPRET_DEFAULT,
+        )
+    from repro.models.attention import flash_attention as fa_xla
+
+    return fa_xla(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+
+
+def rwkv6(r, k, v, w, u, *, initial_state=None, chunk=64,
+          implementation="xla"):
+    """RWKV-6 WKV. Returns (out, final_state)."""
+    if implementation == "ref":
+        return _ref.rwkv6_ref(r, k, v, w, u, initial_state=initial_state)
+    if implementation == "pallas":
+        from repro.kernels import rwkv6_kernel
+
+        return rwkv6_kernel.rwkv6_pallas(
+            r, k, v, w, u, initial_state=initial_state, chunk=chunk,
+            interpret=INTERPRET_DEFAULT,
+        )
+    return _rwkv6_chunked_xla(
+        r, k, v, w, u, initial_state=initial_state, chunk=chunk
+    )
+
+
+def _rwkv6_chunked_xla(r, k, v, w, u, *, initial_state=None, chunk=64):
+    """Chunked-parallel WKV6 (the XLA perf path).
+
+    Within a chunk of length c, with cumulative decay products
+    A_t = prod_{s<=t} w_s (per channel):
+
+        intra: o_t  = sum_{s<t} (r_t * A_t / A_s) . k_s v_s + r_t.(u*k_t) v_t
+        inter: o_t += (r_t * A_t / w_t^{0}) ... handled as r_t A_t . S_in
+        state: S_out = A_c * S_in + sum_s (A_c / A_s) k_s v_s
+
+    All divisions guarded in log space: w in (0,1) so log w < 0.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        zero = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zero(r), zero(k), zero(v)
+        # pad decay with ones (identity)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    Tp = T + pad
+    n = Tp // c
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), f32)
+
+    rs = r.reshape(B, n, c, H, K).astype(f32)
+    ks = k.reshape(B, n, c, H, K).astype(f32)
+    vs = v.reshape(B, n, c, H, V).astype(f32)
+    ws = w.reshape(B, n, c, H, K).astype(f32)
+    u32 = u.astype(f32)
+
+    logw = jnp.log(jnp.clip(ws, 1e-12, 1.0))
+    # A[t] = prod_{s<=t} w_s  (inclusive); computed in log space.
+    logA = jnp.cumsum(logw, axis=2)  # (B, n, c, H, K)
+
+    def chunk_step(S, xs):
+        rc, kc, vc, logAc, logwc = xs  # (B, c, H, *)
+        Ac = jnp.exp(logAc)
+        # inter-chunk: o_inter[t] = (r_t * A[t-1]... note state S holds
+        # contributions strictly before the chunk, decayed to chunk start.
+        # Here decay-to-t of S is A[t] excluding w_t? The recurrence applies
+        # decay before adding kv at step t: S_t = w_t S_{t-1} + k_t v_t, and
+        # o_t reads S_{t-1} + u k_t v_t ... with o_t = r.(S_{t-1}+u kv_t):
+        # contribution of S_in to o_t is r_t * (A[t]/w_t ... = A[t-1]) S_in.
+        logA_prev = logAc - logwc  # A[t-1] inclusive-prod trick
+        o_inter = jnp.einsum(
+            "bchk,bhkv->bchv", rc * jnp.exp(logA_prev), S
+        )
+        # intra-chunk (s < t): weight A[t-1]/A[s]
+        ratio = logA_prev[:, :, None] - logAc[:, None, :]  # (B,t,s,H,K)
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        decay = jnp.exp(
+            jnp.where(mask[None, :, :, None, None], ratio, -jnp.inf)
+        )
+        att = jnp.einsum("bthk,btshk,bshk->btsh", rc, decay, kc)
+        o_intra = jnp.einsum("btsh,bshv->bthv", att, vc)
+        # diagonal (s == t) with bonus u
+        o_diag = jnp.einsum("bthk,hk,bthk,bthv->bthv", rc, u32, kc, vc)
+        o = o_inter + o_intra + o_diag
+        # state update: S_out = A[c-1] * S + sum_s (A[c-1]/A[s]) k_s v_s
+        logA_end = logAc[:, -1][:, None]  # (B,1,H,K)
+        carry_w = jnp.exp(logA_end - logAc)  # (B,c,H,K)
+        S = jnp.exp(logA_end[:, 0])[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", kc * carry_w, vc
+        )
+        return S, o
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (rs, ks, vs, logA, logw)
+    )
+    S, out = jax.lax.scan(chunk_step, initial_state.astype(f32), xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Tp, H, V)
+    if pad:
+        out = out[:, :T]
+    return out.astype(v.dtype), S

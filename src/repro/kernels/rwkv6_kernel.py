@@ -1,0 +1,124 @@
+"""RWKV-6 (Finch) WKV Pallas TPU kernel — chunked linear attention with
+data-dependent per-channel decay.
+
+    o_t = r_t . (S_{t-1} + u * k_t v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Grid (B, H, T/c), chunk innermost: the (K, V) state lives in VMEM scratch
+and persists across chunk iterations (the sequential dependency), while
+within a chunk everything is parallel matmul work:
+
+    inter: o += (r * A_prev) @ S
+    intra: o += [(r_t . k_s) * exp(A_prev[t] - A[s])]_{s<t} @ v
+    diag : o += (r_t . (u * k_t)) v_t
+    state: S  = A_end * S + (k * A_end/A)^T @ v
+
+with A = cumprod(w) computed in log space inside the kernel. VMEM per
+step at (c, K, V) = (64, 64, 64): r/k/v/w tiles 4*c*K, decay tensor
+c*c*K*4B = 1 MB, state K*V*4B — ~1.3 MB total. The decay tensor is the
+reason RWKV needs a kernel: the XLA chunked path materializes it in HBM
+every chunk (see ops._rwkv6_chunked_xla).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+            state, *, c: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (c, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (c, V)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (K,)
+
+    logw = jnp.log(jnp.clip(w, 1e-12, 1.0))
+    logA = jnp.cumsum(logw, axis=0)  # (c, K) inclusive
+    logA_prev = logA - logw
+
+    S = state[...]  # (K, V)
+    o = jnp.dot(
+        r * jnp.exp(logA_prev), S, preferred_element_type=jnp.float32
+    )  # (c, V)
+
+    # intra-chunk, strictly lower triangular in (t, s)
+    ratio = logA_prev[:, None, :] - logA[None, :, :]  # (c, c, K)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    mask = t_idx > s_idx
+    decay = jnp.where(mask[..., None], jnp.exp(ratio), 0.0)
+    att = jnp.einsum("tk,tsk,sk->ts", r, decay, k)  # (c, c)
+    o = o + jnp.dot(att, v, preferred_element_type=jnp.float32)
+
+    # diagonal with bonus u
+    o = o + ((r * u[None] * k).sum(-1))[:, None] * v
+
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    logA_end = logA[-1]  # (K,)
+    carry = jnp.exp(logA_end[None, :] - logA)  # (c, K)
+    state[...] = (
+        jnp.exp(logA_end)[:, None] * S
+        + jnp.dot(
+            (k * carry).T, v, preferred_element_type=jnp.float32
+        )
+    )
+
+    @pl.when(ci == nc - 1)
+    def _():
+        sf_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_pallas(r, k, v, w, u, *, initial_state=None, chunk: int = 64,
+                 interpret: bool = False):
+    """r,k,w: (B,T,H,K); v: (B,T,H,V); u: (H,K). -> (o (B,T,H,V), S)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    Tp = T + pad
+    nc = Tp // c
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    o, sf = pl.pallas_call(
+        functools.partial(_kernel, c=c, nc=nc),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, c, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, c, 1, V), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, c, 1, K), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, K), lambda b, h, ci: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, V), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, H, V), v.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, initial_state)
+    if pad:
+        o = o[:, :T]
+    return o, sf

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, prove memory/sharding coherence, and emit
+the roofline raw terms.
+
+MUST be run as its own process (the XLA_FLAGS line above must execute
+before jax initializes devices — do not import this module from a process
+that already used jax):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # spawns one
+        subprocess per cell; writes artifacts/dryrun/*.json
+
+Per cell this prints compiled.memory_analysis() (proves it fits) and
+cost_analysis() (FLOPs/bytes for the roofline), parses the partitioned HLO
+for collective traffic, and writes a JSON artifact consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, profile: str,
+             out_dir: str, extra_ac: dict | None = None,
+             tag: str = "") -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import (
+        HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh,
+    )
+    from repro.launch.specs import build_cell
+
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, SHAPES[shape])
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "profile": profile,
+        "tag": tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(rec, out_dir, tag)
+        print(f"[dryrun] SKIP {arch} x {shape}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.devices.size
+    step, args, info = build_cell(
+        arch, shape, mesh, profile=profile, extra_ac=extra_ac
+    )
+    rec.update(info)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} ({profile})")
+        print(f"  memory_analysis: {mem}")
+        cost = compiled.cost_analysis()
+        print(
+            "  cost_analysis: flops=%.3e bytes=%.3e"
+            % (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0))
+        )
+        hlo = compiled.as_text()
+    # Authoritative terms come from the HLO parser: compiled.cost_analysis
+    # counts while-loop bodies once (verified; see hlo_analysis docstring),
+    # so for scan-over-layers models it undercounts by the layer count.
+    hstats = hlo_analysis.analyze(hlo)
+    flops_dev = float(hstats["dot_flops"])
+    bytes_dev = float(hstats["traffic_bytes"])
+    coll_dev = float(hstats["collective_bytes"])
+    coll = {"bytes": coll_dev, "counts": hstats["collective_counts"]}
+    args_b = mem.argument_size_in_bytes
+    temp_b = mem.temp_size_in_bytes
+    out_b = mem.output_size_in_bytes
+    hbm_total = args_b + temp_b + out_b
+
+    # roofline terms (seconds, per chip)
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_coll), key=lambda kv: kv[1],
+    )[0]
+    # MODEL_FLOPS convention: 6ND train, 2ND inference, per device.
+    tokens = info["global_batch"] * (
+        info["seq_len"] if info["kind"] != "decode" else 1
+    )
+    n_active = info["params_active"]
+    mult = 6 if info["kind"] == "train" else 2
+    model_flops_total = mult * n_active * tokens
+    model_flops_dev = model_flops_total / n_chips
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops_per_device=flops_dev,
+        hlo_bytes_per_device=bytes_dev,
+        cost_analysis_flops_unscaled=float(cost.get("flops", 0.0)),
+        cost_analysis_bytes_unscaled=float(
+            cost.get("bytes accessed", 0.0)
+        ),
+        collective_bytes_per_device=coll_dev,
+        collective_counts=coll["counts"],
+        memory={
+            "argument_bytes": args_b,
+            "temp_bytes": temp_b,
+            "output_bytes": out_b,
+            "total_bytes": hbm_total,
+            "fits_16g": bool(hbm_total < 16 * 1024 ** 3),
+        },
+        roofline={
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "step_time_lower_bound_s": max(t_compute, t_memory, t_coll),
+        },
+        model_flops_per_device=model_flops_dev,
+        useful_flops_ratio=(
+            model_flops_dev / flops_dev if flops_dev else 0.0
+        ),
+    )
+    _write(rec, out_dir, tag)
+    print(
+        "  roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s"
+        % (t_compute, t_memory, t_coll, dominant)
+    )
+    print(
+        "  model_flops/hlo_flops=%.3f  fits_16G=%s"
+        % (rec["useful_flops_ratio"], rec["memory"]["fits_16g"])
+    )
+    return rec
+
+
+def _write(rec: dict, out_dir: str, tag: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = (
+        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        f"__{rec['profile']}{suffix}.json"
+    ).replace("/", "_")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def all_cells(meshes, profile):
+    from repro.configs import assigned_archs, SHAPES
+
+    for arch in assigned_archs():
+        for shape in SHAPES:
+            for mesh_kind in meshes:
+                yield arch, shape, mesh_kind, profile
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized", "serve_tp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--extra-ac", default="",
+                    help='JSON ApplyCfg overrides, e.g. {"ce_chunk":1024}')
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable cell in subprocesses")
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        meshes = args.meshes.split(",")
+        failures = []
+        for arch, shape, mesh_kind, profile in all_cells(
+            meshes, args.profile
+        ):
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                "--profile", profile, "--out", args.out,
+            ]
+            print("=" * 72)
+            print(" ".join(cmd), flush=True)
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh_kind))
+        print("=" * 72)
+        if failures:
+            print(f"[dryrun] FAILURES: {failures}")
+            sys.exit(1)
+        print("[dryrun] all cells OK")
+        return
+
+    extra_ac = json.loads(args.extra_ac) if args.extra_ac else None
+    run_cell(args.arch, args.shape, args.mesh, args.profile, args.out,
+             extra_ac=extra_ac, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,379 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE — for a
+scan-over-layers model that undercounts FLOPs by the layer count (verified
+on this backend; see EXPERIMENTS.md §Dry-run methodology). This module
+parses the partitioned module instead and multiplies every term by loop
+trip counts:
+
+  * dot_flops        — 2 * prod(result) * prod(contracting dims), convs
+                       approximated as 2 * prod(result) * prod(kernel)/O;
+  * traffic_bytes    — per top-level op (fusion internals excluded:
+                       a fusion's HBM traffic is its operands + result),
+                       result + operand bytes;
+  * collective_bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+                       (+ their async -start forms), with per-op counts.
+
+All values are PER DEVICE (the partitioned module is per-device).
+
+Mechanics: split the module into computations; per-computation symbol
+table (op name -> shape); call graph via fusion ``calls=``, while
+body/condition, conditionals, ``to_apply``; while trip counts from the
+comparison constant in the condition; multipliers propagated from ENTRY.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]"
+)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>.*?)\s*"
+    r"(?P<opcode>[\w\-]+)\((?P<operands>[^)]*)\)(?P<attrs>.*)$"
+)
+def _comp_header(line: str) -> Optional[str]:
+    """Computation header: '[ENTRY] %name (params...) -> type {'.
+
+    Param lists nest parentheses (tuple-typed params), so match
+    structurally: ends with '{', contains '->', name is the first token.
+    """
+    if not line.endswith("{") or "->" not in line:
+        return None
+    head = line.split("(", 1)[0].strip()
+    if head.startswith("ENTRY"):
+        head = head[len("ENTRY"):].strip()
+    head = head.lstrip("%").strip()
+    if not head or "=" in head:
+        return None
+    return head
+_CALL_RE = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=|true_computation=|"
+    r"false_computation=)%?([\w.\-]+)"
+)
+_WHILE_RE = re.compile(
+    r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# Ops that don't move HBM bytes by themselves.
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control flow: body/branch traffic is accounted in the callee
+    "while", "conditional", "call",
+}
+# Ops that touch only a slice of their (possibly huge) operand: count
+# 2 x moved-slice bytes instead of operand + result.
+_SLICE_READS = {"dynamic-slice", "slice", "gather"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+
+
+def _parse_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d.strip())
+        out.append((dt, shape))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, shape in _parse_shapes(text):
+        total += math.prod(shape) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict = dataclasses.field(default_factory=dict)  # name -> Op
+    order: list = dataclasses.field(default_factory=list)
+    calls: list = dataclasses.field(default_factory=list)
+    whiles: list = dataclasses.field(default_factory=list)
+    fusion_calls: set = dataclasses.field(default_factory=set)
+    max_const: int = 0
+
+
+def parse(hlo: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        hdr = _comp_header(s)
+        if hdr is not None:
+            cur = Computation(hdr)
+            comps[cur.name] = cur
+            if s.startswith("ENTRY") or raw.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(s)
+        if not om:
+            continue
+        op = Op(
+            name=om.group("name"),
+            type_str=om.group("type"),
+            opcode=om.group("opcode"),
+            operands=[
+                o.strip().lstrip("%")
+                for o in om.group("operands").split(",")
+                if o.strip().startswith("%")
+            ],
+            attrs=om.group("attrs"),
+            raw=s,
+        )
+        cur.ops[op.name] = op
+        cur.order.append(op.name)
+        for cm in _CALL_RE.finditer(s):
+            cur.calls.append(cm.group(1))
+            if op.opcode == "fusion":
+                cur.fusion_calls.add(cm.group(1))
+        if op.opcode == "while":
+            wm = _WHILE_RE.search(s)
+            if wm:
+                cur.whiles.append((wm.group(1), wm.group(2)))
+        for km in _CONST_RE.finditer(s):
+            cur.max_const = max(cur.max_const, int(km.group(1)))
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    shapes = _parse_shapes(op.type_str)
+    if not shapes:
+        return 0.0
+    result = math.prod(shapes[0][1])
+    if op.opcode == "dot":
+        cm = _CONTRACT_RE.search(op.attrs)
+        lhs = comp.ops.get(op.operands[0]) if op.operands else None
+        if cm and lhs is not None:
+            lshapes = _parse_shapes(lhs.type_str)
+            if lshapes:
+                lshape = lshapes[0][1]
+                k = math.prod(
+                    lshape[int(d)]
+                    for d in cm.group(1).split(",") if d.strip()
+                )
+                return 2.0 * result * k
+        return 2.0 * result  # fallback
+    if op.opcode == "convolution":
+        kern = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+        if kern is not None:
+            kshapes = _parse_shapes(kern.type_str)
+            if kshapes:
+                kshape = kshapes[0][1]
+                o = kshape[-1] if kshape else 1
+                return 2.0 * result * math.prod(kshape) / max(o, 1)
+    return 0.0
+
+
+@dataclasses.dataclass
+class CompStats:
+    coll_bytes: int = 0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_traffic(op: Op, comp: Computation,
+                    comps: dict[str, Computation]) -> int:
+    """HBM traffic of one fusion op.
+
+    Default: operands + result. Refinements when the callee body is known:
+      * internal dynamic-update-slice => the big target buffer is updated
+        in place: count 2 x update bytes, exclude the aliased operand and
+        the result;
+      * internal dynamic-slice/gather reading a fusion parameter => count
+        the slice result instead of the whole parameter.
+    """
+    callee_name = None
+    m = _CALL_RE.search(op.raw)
+    if m:
+        callee_name = m.group(1)
+    callee = comps.get(callee_name) if callee_name else None
+    result_b = _shape_bytes(op.type_str)
+    if callee is None:
+        b = result_b
+        for o in op.operands:
+            src = comp.ops.get(o)
+            if src is not None and src.opcode not in (
+                "constant", "tuple", "after-all"
+            ):
+                b += _shape_bytes(src.type_str)
+        return b
+    # parameter index -> full bytes
+    param_full: dict[int, int] = {}
+    param_name_to_idx: dict[str, int] = {}
+    for name in callee.order:
+        cop = callee.ops[name]
+        if cop.opcode == "parameter":
+            pm_ = _PARAM_IDX_RE.search(cop.raw)
+            if pm_:
+                idx = int(pm_.group(1))
+                param_full[idx] = _shape_bytes(cop.type_str)
+                param_name_to_idx[cop.name] = idx
+    consumed = dict(param_full)
+    in_place = 0
+    for name in callee.order:
+        cop = callee.ops[name]
+        if cop.opcode in ("dynamic-slice", "gather") and cop.operands:
+            idx = param_name_to_idx.get(cop.operands[0])
+            if idx is not None:
+                sliced = _shape_bytes(cop.type_str)
+                consumed[idx] = min(consumed.get(idx, sliced), sliced)
+        elif cop.opcode == "dynamic-update-slice" and len(cop.operands) > 1:
+            upd = callee.ops.get(cop.operands[1])
+            upd_b = _shape_bytes(upd.type_str) if upd else 0
+            in_place += 2 * upd_b
+            tgt_idx = param_name_to_idx.get(cop.operands[0])
+            if tgt_idx is not None:
+                consumed[tgt_idx] = 0
+    # map operand order -> parameter index (same order in HLO fusions)
+    total = in_place
+    if not in_place:
+        total += result_b
+    for i, o in enumerate(op.operands):
+        src = comp.ops.get(o)
+        if src is None or src.opcode in ("constant", "tuple", "after-all"):
+            continue
+        total += consumed.get(i, _shape_bytes(src.type_str))
+    return total
+
+
+def _comp_stats(comp: Computation, fused: bool) -> CompStats:
+    st = CompStats()
+    for name in comp.order:
+        op = comp.ops[name]
+        base = op.opcode.removesuffix("-start")
+        if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+            b = _shape_bytes(op.type_str)
+            st.coll_bytes += b
+            st.coll_counts[base] = st.coll_counts.get(base, 0) + 1
+        if op.opcode in ("dot", "convolution"):
+            st.dot_flops += _dot_flops(op, comp)
+        if not fused and op.opcode not in _NO_TRAFFIC:
+            if op.opcode == "fusion":
+                st.traffic_bytes += _fusion_traffic(op, comp, _COMPS_CTX[0])
+                continue
+            if op.opcode in _SLICE_READS:
+                b = 2 * _shape_bytes(op.type_str)
+            elif op.opcode in _SLICE_WRITES:
+                upd = (
+                    comp.ops.get(op.operands[1])
+                    if len(op.operands) > 1 else None
+                )
+                b = 2 * (_shape_bytes(upd.type_str) if upd else 0)
+            else:
+                b = _shape_bytes(op.type_str)
+                for o in op.operands:
+                    src = comp.ops.get(o)
+                    if src is not None and src.opcode not in (
+                        "constant", "tuple", "after-all"
+                    ):
+                        b += _shape_bytes(src.type_str)
+            st.traffic_bytes += b
+    return st
+
+
+_COMPS_CTX: list = [dict()]
+
+
+def analyze(hlo: str) -> dict:
+    """Per-device totals, loop-trip-count weighted."""
+    comps, entry = parse(hlo)
+    _COMPS_CTX[0] = comps
+    if entry is None:
+        entry = next(
+            (n for n in comps if n.startswith("main")),
+            list(comps)[-1] if comps else None,
+        )
+    fused_names = set()
+    for c in comps.values():
+        fused_names |= c.fusion_calls
+    stats = {
+        n: _comp_stats(c, fused=n in fused_names)
+        for n, c in comps.items()
+    }
+    total = CompStats()
+    visiting: set[str] = set()
+
+    def trip(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        return max(cond.max_const, 1) if cond else 1
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in visiting:
+            return
+        visiting.add(name)
+        comp, st = comps[name], stats[name]
+        total.coll_bytes += mult * st.coll_bytes
+        total.dot_flops += mult * st.dot_flops
+        total.traffic_bytes += mult * st.traffic_bytes
+        for op, n in st.coll_counts.items():
+            total.coll_counts[op] = total.coll_counts.get(op, 0) + mult * n
+        handled = set()
+        for cond_name, body_name in comp.whiles:
+            t = trip(cond_name)
+            handled |= {cond_name, body_name}
+            visit(body_name, mult * t)
+            visit(cond_name, mult * t)
+        for callee in comp.calls:
+            if callee not in handled:
+                visit(callee, mult)
+        visiting.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+    return {
+        "collective_bytes": int(total.coll_bytes),
+        "collective_counts": {
+            k: int(v) for k, v in total.coll_counts.items()
+        },
+        "dot_flops": float(total.dot_flops),
+        "traffic_bytes": float(total.traffic_bytes),
+    }
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Back-compat wrapper: {"bytes", "counts"}."""
+    r = analyze(hlo)
+    return {"bytes": r["collective_bytes"], "counts": r["collective_counts"]}

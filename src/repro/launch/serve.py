@@ -1,0 +1,53 @@
+"""Serving launcher: load a checkpoint (or fresh params) and serve batched
+requests from stdin or a demo batch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
+        --reduced [--ckpt-dir DIR] [--max-new 16] [--temperature 0.8]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced
+    from repro.models import model_zoo as zoo
+    from repro.models import param as pm
+    from repro.training.serve import ServeConfig, ServeEngine
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    params, _ = pm.split(wrapped)
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(args.ckpt_dir)
+        like = {"params": params}
+        restored, step, _ = mgr.restore_latest(like)
+        if restored is not None:
+            params = restored["params"]
+            print(f"[serve] loaded checkpoint step {step}")
+
+    eng = ServeEngine(
+        params, cfg,
+        ServeConfig(max_batch=args.max_batch, max_len=256,
+                    temperature=args.temperature),
+    )
+    demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
+    for i, seq in enumerate(eng.generate(demo, max_new=args.max_new)):
+        print(f"[serve] req{i}: {demo[i]} -> {seq[len(demo[i]):]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 200 --ckpt-dir artifacts/run1 [--upcycle-from DIR]
+
+On a real cluster this process runs once per host (jax.distributed
+initialization via the standard env vars); the data iterator shards by
+host and the mesh shards by device automatically. Auto-resumes from the
+newest valid checkpoint in --ckpt-dir.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_run")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--upcycle-from", default="",
+                    help="dense checkpoint dir to sparse-upcycle from")
+    ap.add_argument("--peak-lr", type=float, default=0.01)
+    ap.add_argument("--warmup", type=int, default=100)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced
+    from repro.data import make_iterator
+    from repro.models import model_zoo as zoo
+    from repro.optim import adafactor, inverse_sqrt
+    from repro.training import TrainConfig, Trainer
+    from repro.training.train_loop import PreemptionSignal
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    opt = adafactor(inverse_sqrt(peak=args.peak_lr,
+                                 warmup_steps=args.warmup))
+    tc = TrainConfig(grad_accum=args.grad_accum,
+                     compression=args.compression)
+    it = make_iterator(cfg, global_batch=args.batch, seq_len=args.seq)
+
+    init_params = None
+    if args.upcycle_from:
+        from repro.checkpoint import CheckpointManager
+        from repro.core.upcycle import upcycle_params
+        from repro.models import param as pm
+
+        if cfg.moe is None:
+            raise SystemExit("--upcycle-from needs an arch with MoE")
+        dense_cfg = cfg.dense_parent()
+        wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+        dvals, axes = pm.split(wrapped)
+        mgr = CheckpointManager(args.upcycle_from)
+        like = {"params": dvals}
+        restored, step, _ = mgr.restore_latest(like)
+        if restored is None:
+            raise SystemExit(f"no checkpoint in {args.upcycle_from}")
+        sw = upcycle_params(
+            pm.wrap(restored["params"], axes), dense_cfg, cfg,
+            jax.random.PRNGKey(7),
+        )
+        init_params, _ = pm.split(sw)
+        print(f"[train] upcycled from {args.upcycle_from} @ step {step}")
+
+    sig = PreemptionSignal().install()
+    tr = Trainer(cfg, opt, it, args.ckpt_dir,
+                 ac=zoo.ApplyCfg(remat=args.remat), tc=tc, preemption=sig)
+    out = tr.run(args.steps, init_params=init_params)
+    print(f"[train] finished at step {int(out['state']['step'])}, "
+          f"loss {float(out['metrics']['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""GQA attention with chunked online-softmax ("flash") compute.
+
+The jnp implementation here is the XLA path used for training/prefill
+lowering: memory is O(q_chunk * kv_chunk) per (batch, head) instead of
+O(S^2), so the 32k-prefill dry-run memory analysis is meaningful. The
+Pallas TPU kernel (repro/kernels/flash_attention.py) implements the same
+math with explicit VMEM BlockSpecs; `ops.flash_attention` selects between
+them.
+
+Shapes: q (B, Sq, H, dh); k, v (B, Skv, Kh, dh) with H % Kh == 0 (GQA).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import param as pm
+from repro.models.layers import rope
+
+NEG_INF = float("-inf")
+
+
+def attention_init(rng, cfg: ArchConfig, *, dtype=jnp.float32):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": pm.dense(ks[0], (d, h, dh), "embed heads head_dim", dtype=dtype),
+        "wk": pm.dense(ks[1], (d, kh, dh), "embed kv_heads head_dim", dtype=dtype),
+        "wv": pm.dense(ks[2], (d, kh, dh), "embed kv_heads head_dim", dtype=dtype),
+        "wo": pm.dense(
+            ks[3], (h, dh, d), "heads head_dim embed", dtype=dtype,
+            fan_in=h * dh,
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pm.zeros((h, dh), "heads head_dim", dtype=dtype)
+        p["bk"] = pm.zeros((kh, dh), "kv_heads head_dim", dtype=dtype)
+        p["bv"] = pm.zeros((kh, dh), "kv_heads head_dim", dtype=dtype)
+    return p
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    kv_len: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention; O(q_chunk*kv_chunk) live scores.
+
+    q_offset: absolute position of q[0] (for causal masking during decode).
+    kv_len: number of valid kv positions (cache may be padded).
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    scale = dh ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # Pad to chunk multiples (model seq lens are powers of two; padding is a
+    # no-op there but keeps odd test shapes working).
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_kv
+    if kv_len is None:
+        kv_len = jnp.asarray(Skv, jnp.int32)
+
+    # (B, Kh, G, S, dh) grouped-query layout.
+    qg = q.reshape(B, Sq_p, Kh, G, dh).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)  # (B, Kh, Skv, dh)
+    vg = v.transpose(0, 2, 1, 3)
+
+    nq = Sq_p // q_chunk
+    nkv = Skv_p // kv_chunk
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    qg = qg.reshape(B, Kh, G, nq, q_chunk, dh).transpose(3, 0, 1, 2, 4, 5)
+    kg = kg.reshape(B, Kh, nkv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+    vg = vg.reshape(B, Kh, nkv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    def q_block(args):
+        qb, iq = args  # qb: (B, Kh, G, qc, dh)
+        q_pos = q_pos_base + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, ikv = xs  # kb: (B, Kh, kc, dh)
+            kv_pos = ikv * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bkgqd,bktd->bkgqt", qb, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = kv_pos[None, :] < kv_len  # valid kv
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # Rows with no valid key yet keep m == -inf; guard the exp.
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.where(
+                jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+            )
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Kh, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kg, vg, jnp.arange(nkv))
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        return acc / l[..., None]
+
+    out = jax.lax.map(q_block, (qg, jnp.arange(nq)))  # (nq,B,Kh,G,qc,dh)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Kh, G, Sq_p, dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq_p, H, dh)
+    if pad_q:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None):
+    """O(S^2)-memory oracle for tests."""
+    B, Sq, H, dh = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, dh)
+    s = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+    ) * dh ** -0.5
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_len)
+    if causal:
+        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgqt,btkd->bqkgd", p, v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def attention_apply(
+    p,
+    x,
+    cfg: ArchConfig,
+    *,
+    positions=None,
+    causal: bool = True,
+    cache=None,
+    cache_index=None,
+    kv_x=None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    ctx=None,
+    pad_heads_multiple: int = 0,
+):
+    """Self- or cross-attention.
+
+    cache: None, or dict {k: (B, S_max, Kh, dh), v: ...} — functional KV
+    cache. cache_index: current length (traced int32) where new kv is
+    written. kv_x: encoder states for cross-attention (no cache/causality).
+
+    pad_heads_multiple: zero-pad query heads (and wo) up to a multiple of
+    this, so head counts that don't divide the tensor-parallel mesh axis
+    (e.g. qwen2.5's 40 heads on a 16-wide axis) still shard — padded heads
+    compute garbage attention that is annihilated by the zero wo rows, so
+    the function is EXACTLY preserved (tests/test_attention_padding).
+    Returns (y, new_cache).
+    """
+    from repro.sharding import act as _act
+
+    B, Sq, _ = x.shape
+    src = x if kv_x is None else kv_x
+    wq, wo = p["wq"], p["wo"]
+    H = wq.shape[1]
+    Kh = p["wk"].shape[1]
+    pad_h = 0
+    if pad_heads_multiple and H % pad_heads_multiple:
+        # Insert zero heads PER KV GROUP so original heads keep their kv
+        # group under the (Kh, G) reshape inside flash attention.
+        g0 = H // Kh
+        g1 = g0
+        while (Kh * g1) % pad_heads_multiple:
+            g1 += 1
+        pad_h = Kh * g1 - H
+
+        def pad_grouped(w, head_axis):
+            shape = w.shape
+            w = jnp.moveaxis(w, head_axis, 0).reshape(
+                (Kh, g0) + shape[:head_axis] + shape[head_axis + 1:]
+            )
+            w = jnp.pad(
+                w, ((0, 0), (0, g1 - g0)) + ((0, 0),) * (w.ndim - 2)
+            )
+            w = w.reshape((Kh * g1,) + shape[:head_axis]
+                          + shape[head_axis + 1:])
+            return jnp.moveaxis(w, 0, head_axis)
+
+        wq = pad_grouped(wq, 1)
+        wo = pad_grouped(wo, 0)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        bq = p["bq"] if not pad_h else pad_grouped(p["bq"], 0)
+        q, k, v = q + bq, k + p["bk"], v + p["bv"]
+    q = _act(ctx, q, "batch seq heads head_dim")
+    k = _act(ctx, k, "batch seq kv_heads head_dim")
+    v = _act(ctx, v, "batch seq kv_heads head_dim")
+
+    if cfg.pos_emb == "rope" and kv_x is None:
+        if positions is None:
+            base = 0 if cache_index is None else cache_index
+            positions = jnp.asarray(base) + jnp.arange(Sq)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    q_offset = 0
+    kv_len = None
+    if cache is not None and kv_x is None:
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1
+        )
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1
+        )
+        cache = {"k": new_k, "v": new_v}
+        q_offset = cache_index
+        if Sq > 1:
+            # Prefill: attend over the LOCAL fresh k/v, not the cache view.
+            # The cache is seq-sharded over the `model` axis (decode-optimal
+            # layout); chunked flash over that view forces a reshard per
+            # (q, kv) tile — the cache write below is ONE reshard per layer
+            # instead. Assumes prefill starts from an empty cache
+            # (cache_index == 0), which is how prefill() drives it.
+            kv_len = None
+        else:
+            k, v = new_k, new_v
+            kv_len = cache_index + Sq
+
+    if pad_h and (q.shape[2] % k.shape[2]) != 0:
+        raise ValueError("padded heads must remain a multiple of kv heads")
+    if q.shape[1] == 1 and cache is not None:
+        # Decode: one query. Direct attention — XLA lowers the reductions
+        # over a seq-sharded KV cache to all-reduce (distributed softmax),
+        # so 500k caches shard over the `model` axis with no KV gather.
+        y = _decode_attention(q, k, v, kv_len)
+    else:
+        y = flash_attention(
+            q, k, v,
+            causal=causal and kv_x is None,
+            q_offset=q_offset,
+            kv_len=kv_len,
+            q_chunk=q_chunk,
+            kv_chunk=kv_chunk,
+        )
+    out = jnp.einsum("bshk,hkd->bsd", y, wo)
+    return out, cache
+
+
+def _decode_attention(q, k, v, kv_len):
+    """q: (B, 1, H, dh); k, v: (B, S, Kh, dh). Softmax over all valid S."""
+    B, _, H, dh = q.shape
+    Skv, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, dh)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k, preferred_element_type=jnp.float32
+    ) * dh ** -0.5
+    mask = jnp.arange(Skv) < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum(
+        "bkgt,btkd->bkgd", p, v, preferred_element_type=jnp.float32
+    )
+    return y.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+CACHE_AXES = {"k": "batch cache_seq kv_heads head_dim",
+              "v": "batch cache_seq kv_heads head_dim"}

@@ -1,0 +1,392 @@
+"""Top-level model builders: init / train-forward / loss / prefill / decode
+for all architecture families (decoder-only LM, encoder-decoder, encoder-
+only ViT), selected purely by ``ArchConfig``.
+
+Batch formats
+  decoder_only : {"tokens": (B,S) i32, "targets": (B,S) i32}
+                 (+ "patch_embeds": (B,P,d) f for vlm frontends)
+  encoder_decoder: {"enc_tokens": (B,Se) i32 | "frames": (B,Se,d) f,
+                    "dec_tokens": (B,Sd), "targets": (B,Sd)}
+  encoder_only : {"patch_embeds": (B,P,d), "labels": (B,) i32}
+
+Targets use -1 for masked-out positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import param as pm
+from repro.models import stack as stk
+from repro.models.layers import (
+    embed_apply,
+    embed_init,
+    frontend_apply,
+    frontend_init,
+    head_apply,
+    head_init,
+    norm_apply,
+    norm_init,
+)
+from repro.sharding import ShardCtx, act
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyCfg:
+    """Runtime knobs (everything static at trace time)."""
+
+    dispatch: str = "gather"  # moe dispatch: gather | einsum
+    moe_impl: str = "xla"  # xla | pallas | ref
+    mixer_impl: str = "xla"
+    remat: str = "none"  # none | full | dots
+    compute_dtype: str = "float32"  # float32 | bfloat16
+    # Chunked cross-entropy: compute logits+CE in seq chunks under remat so
+    # the (B, S, V) logits tensor is never materialized (0 = full logits;
+    # beyond-paper memory optimization, see EXPERIMENTS.md SPerf).
+    ce_chunk: int = 0
+    # Zero-pad attention heads to a multiple of this so indivisible head
+    # counts still tensor-parallel shard (0 = off; see models/attention).
+    pad_heads_multiple: int = 0
+
+    @property
+    def cdtype(self):
+        return jnp.bfloat16 if self.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ArchConfig, *, dtype=jnp.float32):
+    """Returns a wrapped (Param-leaf) tree."""
+    ks = jax.random.split(rng, 8)
+    p = {}
+    if cfg.structure == "encoder_only":
+        p["frontend"] = frontend_init(ks[0], cfg, dtype=dtype)
+        p["pos"] = pm.normal(
+            ks[1], (cfg.n_frontend_positions, cfg.d_model), "pos embed",
+            std=0.02, dtype=dtype,
+        )
+        p["stack"] = stk.stack_init(
+            ks[2], cfg, stk.layer_descs(cfg, stack="decoder"), dtype=dtype
+        )
+        p["final_norm"] = norm_init(cfg)
+        p["head"] = {
+            "w": pm.dense(ks[3], (cfg.d_model, cfg.vocab_size),
+                          "embed vocab", dtype=dtype)
+        }
+        return p
+
+    p["embed"] = embed_init(ks[0], cfg, dtype=dtype)
+    if cfg.frontend is not None:
+        p["frontend"] = frontend_init(ks[1], cfg, dtype=dtype)
+    if cfg.structure == "encoder_decoder":
+        p["encoder"] = stk.stack_init(
+            ks[2], cfg, stk.layer_descs(cfg, stack="encoder"), dtype=dtype
+        )
+        p["enc_final_norm"] = norm_init(cfg)
+    p["stack"] = stk.stack_init(
+        ks[3], cfg, stk.layer_descs(cfg, stack="decoder"), dtype=dtype
+    )
+    p["final_norm"] = norm_init(cfg)
+    p["head"] = head_init(ks[4], cfg, dtype=dtype)
+    return p
+
+
+def _cast_params(params, dtype):
+    """Mixed precision: compute with a low-precision view of the weights
+    (grads flow through the cast back to the fp32 masters)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval)
+# ---------------------------------------------------------------------------
+
+
+def _embed_decoder_input(params, batch, cfg: ArchConfig, ac: ApplyCfg):
+    tokens = batch["tokens"] if "tokens" in batch else batch["dec_tokens"]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    x = embed_apply(params["embed"], tokens, cfg, positions=positions)
+    if cfg.frontend is not None and "patch_embeds" in batch:
+        front = frontend_apply(
+            params["frontend"], batch["patch_embeds"], cfg
+        ).astype(x.dtype)
+        n_front = front.shape[1]
+        x = jnp.concatenate([front, x[:, n_front:]], axis=1)
+    return x.astype(ac.cdtype)
+
+
+def _encode(params, batch, cfg: ArchConfig, ac: ApplyCfg, ctx):
+    """Encoder stack of enc-dec models."""
+    if cfg.frontend == "frame":
+        x = frontend_apply(params["frontend"], batch["frames"], cfg)
+        from repro.models.layers import sinusoidal
+
+        S = x.shape[1]
+        x = x + sinusoidal(jnp.arange(S), cfg.d_model).astype(x.dtype)
+    else:
+        S = batch["enc_tokens"].shape[1]
+        x = embed_apply(
+            params["embed"], batch["enc_tokens"], cfg,
+            positions=jnp.arange(S),
+        )
+    x = act(ctx, x.astype(ac.cdtype), "batch seq embed")
+    x, mets, _ = stk.stack_apply(
+        params["encoder"], x, cfg, stk.layer_descs(cfg, stack="encoder"),
+        mode="train", causal=False,
+        router_kind=stk.stack_router_kind(cfg, stack="encoder"),
+        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat=ac.remat,
+    )
+    return norm_apply(params["enc_final_norm"], x, cfg), mets
+
+
+def forward_train(
+    params,
+    batch,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+    return_hidden: bool = False,
+):
+    """Returns (logits, metrics); (hidden, metrics) if return_hidden."""
+    params = _cast_params(params, ac.cdtype)
+    if cfg.structure == "encoder_only":
+        x = frontend_apply(params["frontend"], batch["patch_embeds"], cfg)
+        x = x + params["pos"][None]
+        x = act(ctx, x.astype(ac.cdtype), "batch seq embed")
+        x, mets, _ = stk.stack_apply(
+            params["stack"], x, cfg,
+            stk.layer_descs(cfg, stack="decoder"),
+            mode="train", causal=False,
+            router_kind=stk.stack_router_kind(cfg, stack="encoder"),
+            dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+            mixer_impl=ac.mixer_impl, ctx=ctx, remat=ac.remat,
+        )
+        x = norm_apply(params["final_norm"], x, cfg)
+        pooled = x.mean(axis=1)  # global average pooling (paper §2.2)
+        logits = jnp.einsum(
+            "bd,dv->bv", pooled, params["head"]["w"]
+        ).astype(jnp.float32)
+        return logits, mets
+
+    enc = None
+    enc_mets = stk.zero_metrics()
+    if cfg.structure == "encoder_decoder":
+        enc, enc_mets = _encode(params, batch, cfg, ac, ctx)
+
+    x = _embed_decoder_input(params, batch, cfg, ac)
+    x = act(ctx, x, "batch seq embed")
+    x, mets, _ = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        enc=enc, mode="train", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat=ac.remat,
+    )
+    x = norm_apply(params["final_norm"], x, cfg)
+    mets = jax.tree.map(jnp.add, mets, enc_mets)
+    if return_hidden:
+        return x, mets
+    logits = head_apply(
+        params.get("head", {}), x, params["embed"], cfg
+    ).astype(jnp.float32)
+    logits = act(ctx, logits, "batch seq vocab")
+    return logits, mets
+
+
+def loss_fn(
+    params,
+    batch,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """Returns (loss, metrics-dict). CE + weighted MoE aux losses."""
+    if cfg.structure == "encoder_only":
+        logits, mets = forward_train(params, batch, cfg, ac=ac, ctx=ctx)
+        labels = batch["labels"]
+        ce = -jnp.mean(
+            jnp.take_along_axis(
+                jax.nn.log_softmax(logits), labels[:, None], axis=-1
+            )
+        )
+    elif ac.ce_chunk:
+        hidden, mets = forward_train(
+            params, batch, cfg, ac=ac, ctx=ctx, return_hidden=True
+        )
+        w = (
+            params["embed"]["tokens"].T
+            if cfg.tie_embeddings
+            else params["head"]["w"]
+        ).astype(ac.cdtype)
+        ce = _chunked_ce(hidden, w, batch["targets"], ac.ce_chunk)
+    else:
+        logits, mets = forward_train(params, batch, cfg, ac=ac, ctx=ctx)
+        targets = batch["targets"]
+        valid = targets >= 0
+        tgt = jnp.maximum(targets, 0)
+        logp = jax.nn.log_softmax(logits)
+        ce_tok = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(valid.sum(), 1)
+        ce = jnp.where(valid, ce_tok, 0.0).sum() / denom
+    loss = ce + mets["aux_loss"] + mets["z_loss"]
+    out = dict(mets)
+    out.update(loss=loss, ce=ce)
+    return loss, out
+
+
+def _chunked_ce(hidden, w, targets, chunk: int):
+    """CE over seq chunks with per-chunk logits rematerialization.
+
+    hidden: (B, S, d); w: (d, V); targets: (B, S) with -1 = masked.
+    Never materializes (B, S, V): each chunk computes its logits, reduces
+    to per-token CE, and the backward pass recomputes them (jax.checkpoint
+    around the chunk body).
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)),
+                          constant_values=-1)
+    nc = (S + pad) // chunk
+    hc = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        ce_sum, n = carry
+        xch, tch = xs
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xch, w, preferred_element_type=jnp.float32
+        )
+        valid = tch >= 0
+        tgt = jnp.maximum(tch, 0)
+        logp = jax.nn.log_softmax(logits)
+        ce_tok = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        ce_sum = ce_sum + jnp.where(valid, ce_tok, 0.0).sum()
+        n = n + valid.sum()
+        return (ce_sum, n), None
+
+    (ce_sum, n), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (hc, tc)
+    )
+    return ce_sum / jnp.maximum(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_serve_cache(
+    cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+    enc_len: int = 0,
+):
+    descs = stk.layer_descs(cfg, stack="decoder")
+    cache = {"stack": stk.stack_cache_init(cfg, descs, batch, max_len,
+                                           dtype=dtype)}
+    if cfg.structure == "encoder_decoder":
+        cache["enc"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def serve_cache_axes(cfg: ArchConfig):
+    descs = stk.layer_descs(cfg, stack="decoder")
+    axes = {"stack": stk.stack_cache_axes(descs)}
+    if cfg.structure == "encoder_decoder":
+        axes["enc"] = "batch seq embed"
+    return axes
+
+
+def prefill(
+    params,
+    batch,
+    cache,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """Run the full prompt, writing caches. Returns (cache, last_logits)."""
+    params = _cast_params(params, ac.cdtype)
+    enc = None
+    if cfg.structure == "encoder_decoder":
+        enc, _ = _encode(params, batch, cfg, ac, ctx)
+        cache = dict(cache)
+        cache["enc"] = enc.astype(cache["enc"].dtype)
+    x = _embed_decoder_input(params, batch, cfg, ac)
+    x = act(ctx, x, "batch seq embed")
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        enc=enc, cache=cache["stack"], cache_index=jnp.asarray(0, jnp.int32),
+        mode="prefill", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat=ac.remat,
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    x = norm_apply(params["final_norm"], x[:, -1:], cfg)
+    logits = head_apply(
+        params.get("head", {}), x, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits
+
+
+def decode_step(
+    params,
+    tokens,
+    cache,
+    cache_index,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """One autoregressive step. tokens: (B, 1). Returns (cache, logits)."""
+    params = _cast_params(params, ac.cdtype)
+    enc = cache.get("enc") if cfg.structure == "encoder_decoder" else None
+    x = embed_apply(
+        params["embed"], tokens, cfg,
+        positions=cache_index + jnp.arange(1),
+    ).astype(ac.cdtype)
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        enc=None if enc is None else enc.astype(ac.cdtype),
+        cache=cache["stack"], cache_index=cache_index,
+        mode="decode", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat="none",
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = head_apply(
+        params.get("head", {}), x, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits

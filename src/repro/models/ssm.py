@@ -1,0 +1,143 @@
+"""Mamba-1 selective SSM layer (Jamba's mixer; arXiv:2312.00752).
+
+Train/prefill: `lax.scan` over time computing the discretized recurrence
+per step (the decay tensor exp(dt*A) is never materialized over T — the
+(B, T, d_in, d_state) tensor would be terabytes at Jamba scale). Decode:
+single-step state update from (conv_state, ssm_state).
+
+Logical axes put d_inner on the ``model`` mesh axis (tensor parallel), so
+per-device states are (B_local, d_in/16, d_state).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import param as pm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return s, d_in, dt_rank
+
+
+def mamba_init(rng, cfg: ArchConfig, *, dtype=jnp.float32):
+    s, d_in, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    # softplus(dt_bias) spread log-uniform in [1e-3, 1e-1] (mamba init).
+    u = jax.random.uniform(ks[4], (d_in,))
+    dt = jnp.exp(
+        u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    A = jnp.broadcast_to(
+        jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_in, s.d_state)
+    )
+    return {
+        "in_proj": pm.dense(ks[0], (d, 2 * d_in), "embed mlp", dtype=dtype),
+        "conv_w": pm.normal(ks[1], (s.d_conv, d_in), "conv mlp",
+                            std=0.02, dtype=dtype),
+        "conv_b": pm.zeros((d_in,), "mlp", dtype=dtype),
+        "x_proj": pm.dense(
+            ks[2], (d_in, dt_rank + 2 * s.d_state), "mlp _", dtype=dtype
+        ),
+        "dt_w": pm.dense(ks[3], (dt_rank, d_in), "_ mlp", dtype=dtype),
+        "dt_b": pm.Param(dt_bias.astype(dtype), "mlp"),
+        "A_log": pm.Param(jnp.log(A).astype(dtype), "mlp state"),
+        "D": pm.ones((d_in,), "mlp", dtype=dtype),
+        "out_proj": pm.dense(ks[5], (d_in, d), "mlp embed", dtype=dtype),
+    }
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, *, dtype=jnp.float32):
+    s, d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, s.d_state), jnp.float32),
+    }
+
+
+MAMBA_CACHE_AXES = {"conv": "batch conv mlp", "ssm": "batch mlp state"}
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, T, d_in); w: (d_conv, d_in)."""
+    d_conv = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],  # (W, I=1, O=d_in) depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out + b
+
+
+def mamba_apply(p, x, cfg: ArchConfig, *, cache=None, mode="train"):
+    """x: (B, T, d). Returns (y, new_cache). mode: train|prefill|decode."""
+    s, d_in, dt_rank = _dims(cfg)
+    B, T, _ = x.shape
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if mode == "decode":
+        # T == 1: roll the conv window.
+        assert T == 1
+        window = jnp.concatenate([cache["conv"], x_in], axis=1)
+        new_conv = window[:, 1:]
+        xc = jnp.einsum("btc,tc->bc", window, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None]  # (B, 1, d_in)
+    else:
+        xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+        new_conv = None
+        if mode == "prefill":
+            win = s.d_conv - 1
+            tail = jnp.pad(x_in, ((0, 0), (max(win - T, 0), 0), (0, 0)))
+            new_conv = tail[:, -win:] if win else x_in[:, :0]
+
+    xdb = jnp.einsum("btc,ce->bte", xc, p["x_proj"])
+    dt_r = xdb[..., :dt_rank]
+    Bm = xdb[..., dt_rank:dt_rank + s.d_state]
+    Cm = xdb[..., dt_rank + s.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", dt_r, p["dt_w"]) + p["dt_b"]
+    )  # (B, T, d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_in, d_state)
+
+    h0 = (
+        cache["ssm"] if cache is not None
+        else jnp.zeros((B, d_in, s.d_state), jnp.float32)
+    )
+
+    def step(h, xs):
+        xc_t, dt_t, B_t, C_t = xs  # (B,d_in),(B,d_in),(B,ds),(B,ds)
+        dA = jnp.exp(dt_t[..., None] * A[None])  # (B, d_in, d_state)
+        dBx = (dt_t * xc_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bcs,bs->bc", h, C_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Cm, 1, 0).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, T, d_in)
+    y = y + p["D"] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("btc,cd->btd", y, p["out_proj"])
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "ssm": h}
+    return out, new_cache

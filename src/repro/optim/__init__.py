@@ -1,0 +1,8 @@
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.adamw import adamw, sgd  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine,
+    inverse_sqrt,
+    rsqrt_with_cooldown,
+)

@@ -1,0 +1,119 @@
+"""Adafactor (Shazeer & Stern 2018) — the paper's optimizer (§A.1.1/§A.1.2).
+
+t5x-flavored implementation:
+  * factored second moment for rank>=2 leaves (row/col running averages
+    over the last two dims; leading dims — scan 'layer' and 'expert' dims —
+    are batch dims, which is exactly what makes optimizer-state upcycling
+    (§B.6) a broadcast);
+  * decay beta2_t = 1 - (t+1)^-0.8;
+  * update clipped to RMS threshold d=1.0;
+  * optional multiply-by-parameter-scale (T5 pretraining default);
+  * optional momentum (off by default — sublinear memory);
+  * decoupled weight decay.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def _factored(shape, min_size: int = 128) -> bool:
+    """Factor the last two dims only when both are large enough to be worth
+    it (optax convention). Crucially this leaves scan-stacked small params
+    (e.g. norm scales of shape (layers, d)) UNfactored — factoring across
+    the stacked layer dim would couple unrelated layers and break the
+    positional optimizer-state upcycling surgery."""
+    return len(shape) >= 2 and min(shape[-1], shape[-2]) >= min_size
+
+
+def adafactor(
+    lr: Callable,
+    *,
+    decay_exponent: float = 0.8,
+    clip_threshold: float = 1.0,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    multiply_by_parameter_scale: bool = True,
+    beta1: Optional[float] = None,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    def init(params):
+        def slot(p):
+            s = {}
+            if _factored(p.shape, min_dim_size_to_factor):
+                s["v_row"] = jnp.zeros(p.shape[:-1], jnp.float32)
+                s["v_col"] = jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)
+            else:
+                s["v"] = jnp.zeros(p.shape, jnp.float32)
+            if beta1 is not None:
+                s["m"] = jnp.zeros(p.shape, jnp.float32)
+            return s
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "slots": jax.tree.map(slot, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -decay_exponent)
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            new_s = dict(s)
+            if _factored(g.shape, min_dim_size_to_factor):
+                vr = beta2 * s["v_row"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["v_col"] + (1 - beta2) * g2.mean(axis=-2)
+                new_s["v_row"], new_s["v_col"] = vr, vc
+                # rank-1 reconstruction of 1/sqrt(v)
+                row_mean = vr.mean(axis=-1, keepdims=True)
+                r = jax.lax.rsqrt(
+                    (vr / jnp.maximum(row_mean, eps1))[..., None]
+                )
+                c = jax.lax.rsqrt(vc)[..., None, :]
+                u = g * r * c
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                new_s["v"] = v
+                u = g * jax.lax.rsqrt(v)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if beta1 is not None:
+                m = beta1 * s["m"] + (1 - beta1) * u
+                new_s["m"] = m
+                u = m
+            scale = lr_t
+            if multiply_by_parameter_scale:
+                p_rms = jnp.sqrt(
+                    jnp.mean(jnp.square(p.astype(jnp.float32)))
+                )
+                scale = scale * jnp.maximum(p_rms, eps2)
+            delta = -scale * u
+            if weight_decay:
+                delta = delta - lr_t * weight_decay * p.astype(jnp.float32)
+            return delta.astype(p.dtype), new_s
+
+        flat = jax.tree.map(
+            upd, grads, state["slots"], params,
+            is_leaf=lambda x: isinstance(x, jax.Array)
+            and not isinstance(x, dict),
+        )
+        # flat is a tree whose leaves are (delta, slot) tuples at param
+        # positions; split them.
+        updates = jax.tree.map(
+            lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        slots = jax.tree.map(
+            lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return updates, {"step": step, "slots": slots}
+
+    return Optimizer(init, update)

@@ -1,0 +1,99 @@
+"""AdamW + SGD-momentum (modern options; Adafactor is the paper-faithful
+default)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adamw(
+    lr: Callable,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "slots": jax.tree.map(
+                lambda p: {
+                    "m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32),
+                },
+                params,
+            ),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - jnp.power(b1, t)
+        bc2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * g
+            v = b2 * s["v"] + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = -lr_t * (
+                mh / (jnp.sqrt(vh) + eps)
+                + weight_decay * p.astype(jnp.float32)
+            )
+            return delta.astype(p.dtype), {"m": m, "v": v}
+
+        flat = jax.tree.map(
+            upd, grads, state["slots"], params,
+            is_leaf=lambda x: isinstance(x, jax.Array)
+            and not isinstance(x, dict),
+        )
+        updates = jax.tree.map(
+            lambda t_: t_[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        slots = jax.tree.map(
+            lambda t_: t_[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return updates, {"step": step, "slots": slots}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable, *, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "slots": jax.tree.map(
+                lambda p: {"m": jnp.zeros(p.shape, jnp.float32)}, params
+            ),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step)
+
+        def upd(g, s):
+            m = momentum * s["m"] + g.astype(jnp.float32)
+            return (-lr_t * m), {"m": m}
+
+        flat = jax.tree.map(
+            upd, grads, state["slots"],
+            is_leaf=lambda x: isinstance(x, jax.Array)
+            and not isinstance(x, dict),
+        )
+        updates = jax.tree.map(
+            lambda t: t[0].astype(t[0].dtype), flat,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        slots = jax.tree.map(
+            lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return updates, {"step": step, "slots": slots}
+
+    return Optimizer(init, update)

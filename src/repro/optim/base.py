@@ -1,0 +1,34 @@
+"""Minimal optimizer framework (optax is not in the environment).
+
+An ``Optimizer`` is (init, update):
+    state   = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params  = tree_map(add, params, updates)
+
+State is a plain dict pytree: {"step": i32, "slots": <per-leaf dicts
+mirroring the param tree>} — checkpointable with the same store as params,
+and structurally mappable by core/upcycle.upcycle_opt_state.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    import jax.numpy as jnp
+
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )

@@ -1,0 +1,68 @@
+"""LR schedules. All return f(step: int32 array) -> float32 lr.
+
+The paper continues the dense checkpoint's inverse-sqrt schedule "where it
+left off" (§4.1) — our train state carries the absolute step, so resuming
+an upcycled model continues the schedule with no discontinuity by
+construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_sqrt(peak: float = 0.01, warmup_steps: int = 10_000):
+    """T5 schedule: lr = peak * sqrt(warmup) / sqrt(max(step, warmup))."""
+
+    def f(step):
+        s = jnp.maximum(step, warmup_steps).astype(jnp.float32)
+        return peak * jnp.sqrt(float(warmup_steps)) / jnp.sqrt(s)
+
+    return f
+
+
+def rsqrt_with_cooldown(
+    peak: float = 4e-4,
+    warmup_steps: int = 10_000,
+    timescale: int = 100_000,
+    cooldown_start: int = 0,
+    cooldown_steps: int = 50_000,
+):
+    """Vision schedule (paper §A.1.2): linear warmup, reverse-sqrt decay
+    with a timescale, final linear cooldown to 0."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        decay = jnp.sqrt(
+            timescale / jnp.maximum(s + timescale - warmup_steps,
+                                    float(timescale))
+        )
+        lr = peak * warm * decay
+        if cooldown_start > 0:
+            frac = jnp.clip(
+                (s - cooldown_start) / max(cooldown_steps, 1), 0.0, 1.0
+            )
+            lr = lr * (1.0 - frac)
+        return lr
+
+    return f
+
+
+def cosine(peak: float, total_steps: int, warmup_steps: int = 0,
+           floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps \
+            else 1.0
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        return floor + (peak - floor) * warm * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog)
+        )
+
+    return f

@@ -1,0 +1,43 @@
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.sharding.logical import (  # noqa: F401
+    ACT_RULES,
+    PARAM_RULES,
+    Rules,
+    constrain,
+    make_rules,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + rules bundle threaded through model apply fns.
+
+    ``None`` ctx (single-device tests) makes all constraints no-ops via the
+    module-level ``act()`` helper.
+    """
+
+    mesh: Mesh
+    act_rules: Rules
+    param_rules: Rules
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, **kw) -> "ShardCtx":
+        return cls(
+            mesh=mesh,
+            act_rules=make_rules(mesh, params=False, **kw),
+            param_rules=make_rules(mesh, params=True, **kw),
+        )
+
+
+def act(ctx: Optional[ShardCtx], x, logical: str):
+    """Constrain an activation by logical axes; no-op without a ctx."""
+    if ctx is None:
+        return x
+    return constrain(x, logical, ctx.mesh, ctx.act_rules)

@@ -1,0 +1,5 @@
+from repro.training.train_loop import (  # noqa: F401
+    TrainConfig,
+    Trainer,
+    make_train_step,
+)

@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback (beyond-paper distributed
+optimization; DESIGN.md §5).
+
+On 1000+ node deployments the cross-pod (DCN) gradient reduction is the
+scarce resource. We provide lossy compressors with an error-feedback
+residual so compression noise doesn't accumulate (Seide et al. 2014;
+Karimireddy et al. 2019):
+
+    c = Q(g + e);  e' = (g + e) - c;  reduce(c)
+
+``bf16`` halves DCN bytes with negligible quality cost; ``int8`` gives 4x
+with per-tensor scale. The residual buffer lives in the train state, so it
+checkpoints/restores with everything else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compress(grads, residual, kind: str):
+    """Returns (compressed-then-decompressed grads, new residual)."""
+    if kind == "none":
+        return grads, residual
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        if kind == "bf16":
+            c = x.astype(jnp.bfloat16).astype(jnp.float32)
+        elif kind == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127)
+            c = q * scale
+        else:
+            raise ValueError(f"unknown compression {kind!r}")
+        return c.astype(g.dtype), x - c
+
+    flat = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

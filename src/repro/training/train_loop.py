@@ -1,0 +1,276 @@
+"""Training loop: jitted train_step (grad accumulation, compression,
+remat), checkpoint/auto-resume, preemption handling.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics)
+function; distribution comes entirely from in/out shardings + the logical
+constraints inside the model (GSPMD) — the same function serves 1 CPU
+device and a 512-chip mesh.
+
+``Trainer`` is the fault-tolerant driver: auto-resume from the newest
+valid checkpoint, periodic async saves, a preemption hook that triggers a
+final save + clean exit (the launcher restarts the job, which resumes),
+and a step-time watchdog for straggler diagnosis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import DataIterator
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.optim.base import Optimizer, apply_updates, global_norm
+from repro.sharding import ShardCtx, act
+from repro.training import compression
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    grad_accum: int = 1
+    compression: str = "none"  # none | bf16 | int8
+    checkpoint_every: int = 100
+    log_every: int = 10
+    max_to_keep: int = 3
+    # straggler watchdog: warn when a step takes > factor * median
+    straggler_factor: float = 3.0
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    ac: zoo.ApplyCfg = zoo.ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+    tc: TrainConfig = TrainConfig(),
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, mets), grads = jax.value_and_grad(
+            zoo.loss_fn, has_aux=True
+        )(params, batch, cfg, ac=ac, ctx=ctx)
+        return grads, mets
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.grad_accum > 1:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                return (
+                    jax.tree.map(jnp.add, g_acc, g),
+                    jax.tree.map(jnp.add, m_acc, m),
+                ), None
+
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(
+                    (tc.grad_accum, b // tc.grad_accum) + x.shape[1:]
+                )
+
+            micro_batches = jax.tree.map(reshape, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            from repro.models.stack import zero_metrics
+
+            m0 = dict(zero_metrics())
+            m0.update(loss=jnp.zeros(()), ce=jnp.zeros(()))
+            (grads, mets), _ = jax.lax.scan(
+                micro, (g0, m0), micro_batches
+            )
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+            mets = jax.tree.map(lambda m: m / tc.grad_accum, mets)
+        else:
+            grads, mets = grads_of(params, batch)
+
+        if tc.compression != "none":
+            grads, residual = compression.compress(
+                grads, state["residual"], tc.compression
+            )
+        else:
+            residual = state.get("residual")
+
+        updates, opt_state = optimizer.update(
+            grads, state["opt_state"], params
+        )
+        new_params = apply_updates(params, updates)
+        new_state = dict(state)
+        new_state.update(
+            params=new_params,
+            opt_state=opt_state,
+            step=state["step"] + 1,
+        )
+        if residual is not None:
+            new_state["residual"] = residual
+        mets = dict(mets)
+        mets["grad_norm"] = global_norm(grads)
+        return new_state, mets
+
+    return train_step
+
+
+def init_train_state(
+    rng,
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    dtype=jnp.float32,
+    tc: TrainConfig = TrainConfig(),
+    params: Any = None,
+):
+    """params: optional pre-built plain-array tree (e.g. upcycled)."""
+    if params is None:
+        wrapped = zoo.init_params(rng, cfg, dtype=dtype)
+        params, _ = pm.split(wrapped)
+    state = {
+        "params": params,
+        "opt_state": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tc.compression != "none":
+        state["residual"] = compression.init_residual(params)
+    return state
+
+
+def state_axes(cfg: ArchConfig, *, dtype=jnp.float32,
+               tc: TrainConfig = TrainConfig()):
+    """Logical-axes tree matching init_train_state's structure."""
+    wrapped = jax.eval_shape(
+        lambda: zoo.init_params(jax.random.PRNGKey(0), cfg, dtype=dtype)
+    )
+    vals, axes = pm.split(wrapped)
+    opt_axes = {
+        "step": "",
+        "slots": _adafactor_slot_axes(axes, vals),
+    }
+    out = {"params": axes, "opt_state": opt_axes, "step": ""}
+    if tc.compression != "none":
+        out["residual"] = axes
+    return out
+
+
+def _adafactor_slot_axes(axes_tree, shapes_tree):
+    """Map param logical axes -> adafactor slot axes ({v_row, v_col} or
+    {v}); mirrors optim/adafactor._factored exactly."""
+    from repro.optim.adafactor import _factored
+
+    def one(a: str, shaped):
+        names = a.split() if a else []
+        if _factored(tuple(shaped.shape)):
+            return {
+                "v_row": " ".join(names[:-1]),
+                "v_col": " ".join(names[:-2] + names[-1:]),
+            }
+        return {"v": a}
+
+    return jax.tree.map(one, axes_tree, shapes_tree)
+
+
+class PreemptionSignal:
+    """Cooperative preemption flag (SIGTERM handler or test hook)."""
+
+    def __init__(self):
+        self._flag = False
+
+    def install(self):
+        import signal
+
+        def handler(signum, frame):
+            self._flag = True
+
+        signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def trigger(self):
+        self._flag = True
+
+    def __bool__(self):
+        return self._flag
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ArchConfig
+    optimizer: Optimizer
+    data: DataIterator
+    ckpt_dir: str
+    ac: zoo.ApplyCfg = zoo.ApplyCfg()
+    ctx: Optional[ShardCtx] = None
+    tc: TrainConfig = TrainConfig()
+    preemption: Optional[PreemptionSignal] = None
+    log_fn: Callable[[str], None] = print
+
+    def __post_init__(self):
+        self.manager = CheckpointManager(
+            self.ckpt_dir, max_to_keep=self.tc.max_to_keep
+        )
+        self._step_times: list[float] = []
+
+    def run(self, num_steps: int, *, rng=None, init_params=None) -> dict:
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        state = init_train_state(
+            rng, self.cfg, self.optimizer, tc=self.tc, params=init_params
+        )
+        # ---- auto-resume -------------------------------------------------
+        restored, step0, meta = self.manager.restore_latest(state)
+        if restored is not None:
+            state = restored
+            self.data.restore(meta.get("data", {"step": step0}))
+            self.log_fn(f"[trainer] resumed from step {step0}")
+        train_step = jax.jit(
+            make_train_step(
+                self.cfg, self.optimizer, ac=self.ac, ctx=self.ctx,
+                tc=self.tc,
+            ),
+            donate_argnums=(0,),
+        )
+        mets = {}
+        start_step = int(state["step"])
+        for i in range(start_step, num_steps):
+            batch = next(self.data)
+            t0 = time.perf_counter()
+            state, mets = train_step(state, batch)
+            jax.block_until_ready(mets["loss"])
+            dt = time.perf_counter() - t0
+            self._watchdog(i, dt)
+            if (i + 1) % self.tc.log_every == 0:
+                self.log_fn(
+                    f"[trainer] step {i + 1} loss={float(mets['loss']):.4f} "
+                    f"ce={float(mets['ce']):.4f} {dt * 1e3:.0f}ms"
+                )
+            want_ckpt = (i + 1) % self.tc.checkpoint_every == 0
+            if want_ckpt or self.preemption:
+                self.manager.save(
+                    i + 1, state,
+                    metadata={"data": self.data.state(),
+                              "arch": self.cfg.name},
+                    blocking=bool(self.preemption),
+                )
+            if self.preemption:
+                self.log_fn(
+                    f"[trainer] preempted at step {i + 1}; "
+                    "checkpoint saved, exiting cleanly"
+                )
+                break
+        self.manager.wait()
+        return {"state": state, "metrics": mets}
+
+    def _watchdog(self, step: int, dt: float) -> None:
+        self._step_times.append(dt)
+        if len(self._step_times) < 8:
+            return
+        med = float(np.median(self._step_times[-64:]))
+        if dt > self.tc.straggler_factor * med:
+            self.log_fn(
+                f"[trainer][straggler] step {step} took {dt * 1e3:.0f}ms "
+                f"(median {med * 1e3:.0f}ms) — on a pod this triggers the "
+                "slow-host report"
+            )

@@ -1,0 +1,85 @@
+"""Checkpoint store + manager: roundtrip, atomicity, rotation, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_tree, save_tree
+from repro.checkpoint import store
+
+
+def tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.asarray(3)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ckpt")
+    save_tree(p, t, metadata={"step": 7})
+    out = load_tree(p, t)
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert x.dtype == y.dtype
+    assert store.load_metadata(p)["step"] == 7
+
+
+def test_missing_commit_is_invalid(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ckpt")
+    save_tree(p, t)
+    os.remove(os.path.join(p, "COMMIT"))
+    assert not store.is_valid(p)
+    with pytest.raises(FileNotFoundError):
+        load_tree(p, t)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ckpt")
+    save_tree(p, t)
+    with pytest.raises(ValueError):
+        load_tree(p, {"a": t["a"]})
+    bad = dict(t)
+    bad["a"] = jnp.zeros((9, 9))
+    with pytest.raises(ValueError):
+        load_tree(p, bad)
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), max_to_keep=2, keep_period=10)
+    t = tree()
+    for s in [1, 5, 10, 12, 14]:
+        m.save(s, t, metadata={"data": {"step": s}})
+    steps = m.all_steps()
+    assert 10 in steps  # archived by keep_period
+    assert steps[-2:] == [12, 14]
+    assert 1 not in steps and 5 not in steps
+    out, step, meta = m.restore_latest(t)
+    assert step == 14 and meta["data"]["step"] == 14
+
+
+def test_manager_skips_partial_checkpoints(tmp_path):
+    m = CheckpointManager(str(tmp_path), max_to_keep=5)
+    t = tree()
+    m.save(3, t)
+    # simulate a crashed writer at step 9
+    broken = m.step_path(9)
+    os.makedirs(broken)
+    with open(os.path.join(broken, "manifest.json"), "w") as f:
+        f.write("{}")
+    assert m.latest_step() == 3
+    out, step, _ = m.restore_latest(t)
+    assert step == 3
+
+
+def test_async_save(tmp_path):
+    m = CheckpointManager(str(tmp_path), max_to_keep=3)
+    t = tree()
+    m.save_async(2, t)
+    m.wait()
+    assert m.latest_step() == 2

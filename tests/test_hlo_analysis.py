@@ -1,0 +1,95 @@
+"""HLO analyzer unit tests on synthetic module text."""
+from repro.launch import hlo_analysis as H
+
+HLO = """
+HloModule jit_f
+
+%fused_dus (param_0: f32[8,128,128], param_1: f32[128,128], param_2: s32[]) -> f32[8,128,128] {
+  %param_0 = f32[8,128,128]{2,1,0} parameter(0)
+  %param_1 = f32[128,128]{1,0} parameter(1)
+  %param_2 = s32[] parameter(2)
+  %bitcast.1 = f32[1,128,128]{2,1,0} bitcast(%param_1)
+  ROOT %dus = f32[8,128,128]{2,1,0} dynamic-update-slice(%param_0, %bitcast.1, %param_2, %param_2, %param_2)
+}
+
+%body (arg: (s32[], f32[128,128], f32[8,128,128])) -> (s32[], f32[128,128], f32[8,128,128]) {
+  %arg = (s32[], f32[128,128], f32[8,128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%arg), index=1
+  %ws = f32[8,128,128]{2,1,0} get-tuple-element(%arg), index=2
+  %w = f32[1,128,128]{2,1,0} dynamic-slice(%ws, %i, %i, %i), dynamic_slice_sizes={1,128,128}
+  %wb = f32[128,128]{1,0} bitcast(%w)
+  %ag = f32[128,256]{1,0} all-gather(%wb), channel_id=1, replica_groups={{0,1}}, dimensions={1}
+  %agc = f32[128,128]{1,0} slice(%ag), slice={[0:128],[0:128]}
+  %y = f32[128,128]{1,0} dot(%x, %agc), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%y), channel_id=2, replica_groups={{0,1}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[128,128], f32[8,128,128]) tuple(%ip, %ar, %ws)
+}
+
+%cond (arg: (s32[], f32[128,128], f32[8,128,128])) -> pred[] {
+  %arg = (s32[], f32[128,128], f32[8,128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[128,128], p1: f32[8,128,128]) -> f32[128,128] {
+  %p0 = f32[128,128]{1,0} parameter(0)
+  %p1 = f32[8,128,128]{2,1,0} parameter(1)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[128,128], f32[8,128,128]) tuple(%zero, %p0, %p1)
+  %w = (s32[], f32[128,128], f32[8,128,128]) while(%t), condition=%cond, body=%body
+  ROOT %r = f32[128,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_and_collectives():
+    r = H.analyze(HLO)
+    # 8 iterations x (all-gather 128x256x4B + all-reduce 128x128x4B)
+    ag = 8 * 128 * 256 * 4
+    ar = 8 * 128 * 128 * 4
+    assert r["collective_bytes"] == ag + ar
+    assert r["collective_counts"] == {"all-gather": 8, "all-reduce": 8}
+
+
+def test_dot_flops_weighted_by_trips():
+    r = H.analyze(HLO)
+    assert r["dot_flops"] == 8 * 2 * 128 * 128 * 128
+
+
+def test_dynamic_slice_counts_slice_bytes_only():
+    r = H.analyze(HLO)
+    # ds counts the moved slice (~65KB/iter), not the whole 524KB ws
+    # buffer: full-buffer counting would be >= 8 x 524KB = 33.5MB.
+    assert r["traffic_bytes"] < 8e6
+
+
+def test_fusion_dus_counts_update_only():
+    hlo = """
+ENTRY %main (a: f32[64,64], buf: f32[16,64,64]) -> f32[16,64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %buf = f32[16,64,64]{2,1,0} parameter(1)
+  %i = s32[] constant(0)
+  ROOT %f = f32[16,64,64]{2,1,0} fusion(%buf, %a, %i), kind=kLoop, calls=%fused_dus
+}
+
+%fused_dus (param_0: f32[16,64,64], param_1: f32[64,64], param_2: s32[]) -> f32[16,64,64] {
+  %param_0 = f32[16,64,64]{2,1,0} parameter(0)
+  %param_1 = f32[64,64]{1,0} parameter(1)
+  %param_2 = s32[] parameter(2)
+  %b = f32[1,64,64]{2,1,0} bitcast(%param_1)
+  ROOT %dus = f32[16,64,64]{2,1,0} dynamic-update-slice(%param_0, %b, %param_2, %param_2, %param_2)
+}
+"""
+    r = H.analyze(hlo)
+    # 2 x update (64x64x4) + full param_1 read; NOT the 16x64x64 buffer
+    assert r["traffic_bytes"] <= 3 * 64 * 64 * 4 + 8

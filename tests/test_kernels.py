@@ -1,0 +1,183 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.expert_mlp import expert_ffn_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_kernel import rwkv6_pallas
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# expert_mlp
+# ---------------------------------------------------------------------------
+
+EXPERT_CASES = [
+    # E, cap, d, f, gated, act, dtype
+    (4, 64, 32, 48, True, "silu", jnp.float32),
+    (2, 17, 24, 40, False, "gelu", jnp.float32),
+    (8, 128, 64, 96, True, "silu", jnp.bfloat16),
+    (1, 8, 16, 16, False, "sqrelu", jnp.float32),
+    (3, 33, 20, 28, True, "gelu", jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", EXPERT_CASES)
+def test_expert_ffn_pallas_vs_ref(case):
+    E, cap, d, f, gated, act, dtype = case
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (E, cap, d)).astype(dtype)
+    wi = (jax.random.normal(ks[1], (E, d, f)) * 0.1).astype(dtype)
+    wg = (
+        (jax.random.normal(ks[2], (E, d, f)) * 0.1).astype(dtype)
+        if gated else None
+    )
+    wo = (jax.random.normal(ks[3], (E, f, d)) * 0.1).astype(dtype)
+    got = expert_ffn_pallas(
+        xe, wi, wg, wo, act=act, bc=16, bf=16, bd=16, interpret=True
+    )
+    want = ref.expert_ffn_ref(xe, wi, wg, wo, act=act)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_expert_ffn_ops_dispatch():
+    E, cap, d, f = 2, 16, 8, 12
+    ks = jax.random.split(KEY, 3)
+    xe = jax.random.normal(ks[0], (4, E, cap, d))  # grouped (G, E, cap, d)
+    wi = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    wo = jax.random.normal(ks[2], (E, f, d)) * 0.1
+    for impl in ("xla", "pallas", "ref"):
+        y = ops.expert_ffn(xe, wi, None, wo, act="gelu",
+                           implementation=impl)
+        assert y.shape == xe.shape
+    y_x = ops.expert_ffn(xe, wi, None, wo, act="gelu", implementation="xla")
+    y_p = ops.expert_ffn(xe, wi, None, wo, act="gelu",
+                         implementation="pallas")
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Skv, H, Kh, dh, causal, q_offset, kv_len, dtype
+    (2, 64, 64, 4, 2, 16, True, 0, None, jnp.float32),
+    (1, 37, 37, 8, 8, 32, True, 0, None, jnp.float32),
+    (2, 1, 64, 4, 2, 16, True, 40, 41, jnp.float32),
+    (2, 32, 48, 4, 4, 8, False, 0, None, jnp.float32),
+    (1, 64, 64, 4, 1, 16, True, 0, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_pallas_vs_ref(case):
+    B, Sq, Skv, H, Kh, dh, causal, qo, kl, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Kh, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Kh, dh)).astype(dtype)
+    got = flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=qo, kv_len=kl,
+        bq=16, bk=16, interpret=True,
+    )
+    want = ref.flash_attention_ref(
+        q, k, v, causal=causal, q_offset=qo,
+        kv_len=None if kl is None else jnp.asarray(kl),
+    )
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_xla_path_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 40, 8, 16))
+    k = jax.random.normal(ks[1], (2, 40, 2, 16))
+    v = jax.random.normal(ks[2], (2, 40, 2, 16))
+    got = ops.flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [
+    # B, T, H, K, V, chunk, with_state, dtype
+    (2, 32, 2, 8, 8, 8, False, jnp.float32),
+    (1, 37, 4, 16, 16, 16, True, jnp.float32),
+    (2, 64, 2, 8, 12, 32, False, jnp.float32),
+    (1, 16, 2, 8, 8, 4, True, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_rwkv6_vs_ref(case, impl):
+    B, T, H, K, V, chunk, with_state, dtype = case
+    ks = jax.random.split(KEY, 6)
+    r = (jax.random.normal(ks[0], (B, T, H, K)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, T, H, K)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, T, H, V)) * 0.5).astype(dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.6
+         + 0.3).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (H, K)) * 0.3).astype(jnp.float32)
+    s0 = (
+        jax.random.normal(ks[5], (B, H, K, V)) * 0.2 if with_state else None
+    )
+    want_o, want_s = ref.rwkv6_ref(r, k, v, w, u, initial_state=s0)
+    if impl == "pallas":
+        got_o, got_s = rwkv6_pallas(
+            r, k, v, w, u, initial_state=s0, chunk=chunk, interpret=True
+        )
+    else:
+        got_o, got_s = ops.rwkv6(
+            r, k, v, w, u, initial_state=s0, chunk=chunk,
+            implementation="xla",
+        )
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got_o, np.float32), np.asarray(want_o, np.float32),
+        atol=tol, rtol=tol,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(want_s), atol=tol, rtol=tol
+    )
+
+
+def test_rwkv6_state_chaining():
+    """Processing [first half; second half with carried state] == full."""
+    B, T, H, K, V = 1, 32, 2, 8, 8
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, V)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.6 + 0.3
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    o_full, s_full = ref.rwkv6_ref(r, k, v, w, u)
+    h = T // 2
+    o1, s1 = ops.rwkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, chunk=8)
+    o2, s2 = ops.rwkv6(
+        r[:, h:], k[:, h:], v[:, h:], w[:, h:], u,
+        initial_state=s1, chunk=8,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([o1, o2], axis=1)),
+        np.asarray(o_full), atol=2e-4, rtol=1e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(s2), np.asarray(s_full), atol=2e-4, rtol=1e-3
+    )

@@ -1,0 +1,84 @@
+"""Optimizer + schedule tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, constant, cosine, inverse_sqrt
+from repro.optim.base import apply_updates
+
+
+def quad_loss(params):
+    return sum(jnp.sum((p - 1.5) ** 2) for p in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adafactor(constant(0.1)),
+    lambda: adafactor(constant(0.1), beta1=0.9),
+    lambda: adamw(constant(0.1)),
+])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {
+        "a": jnp.zeros((8, 16)),
+        "b": jnp.zeros((5,)),
+        "c": {"d": jnp.zeros((3, 4, 6))},
+    }
+    state = opt.init(params)
+    loss0 = float(quad_loss(params))
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(quad_loss)(params)
+        u, state = opt.update(g, state, params)
+        return apply_updates(params, u), state
+
+    for _ in range(150):
+        params, state = step(params, state)
+    assert float(quad_loss(params)) < 0.05 * loss0
+
+
+def test_adafactor_factored_slots():
+    opt = adafactor(constant(0.1), min_dim_size_to_factor=8)
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((7,)),
+              "e": jnp.zeros((4, 8, 16)), "scale": jnp.zeros((24, 4))}
+    st = opt.init(params)
+    assert st["slots"]["w"]["v_row"].shape == (8,)
+    assert st["slots"]["w"]["v_col"].shape == (16,)
+    assert st["slots"]["b"]["v"].shape == (7,)
+    # leading dims are batch dims (this makes expert tiling a broadcast)
+    assert st["slots"]["e"]["v_row"].shape == (4, 8)
+    assert st["slots"]["e"]["v_col"].shape == (4, 16)
+    # small trailing dims (stacked norm scales) stay unfactored — layer
+    # dims must never be coupled by factoring
+    assert st["slots"]["scale"]["v"].shape == (24, 4)
+
+
+def test_adafactor_update_clipping():
+    opt = adafactor(constant(1.0), multiply_by_parameter_scale=False)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    g = {"w": 1e6 * jnp.ones((4, 4))}
+    u, _ = opt.update(g, state, params)
+    rms = float(jnp.sqrt(jnp.mean(u["w"] ** 2)))
+    assert rms <= 1.0 + 1e-5  # clip_threshold=1 with lr=1
+
+
+def test_inverse_sqrt_schedule_continuity():
+    """Paper §4.1: upcycling continues the schedule where the dense
+    checkpoint left off — lr is a pure function of the global step."""
+    f = inverse_sqrt(peak=0.01, warmup_steps=10_000)
+    np.testing.assert_allclose(float(f(jnp.asarray(10_000))), 0.01)
+    np.testing.assert_allclose(
+        float(f(jnp.asarray(1_000_000))), 0.01 * (10_000 / 1e6) ** 0.5
+    )
+    # monotone decreasing after warmup
+    lrs = [float(f(jnp.asarray(s))) for s in [10_000, 50_000, 1_000_000]]
+    assert lrs[0] > lrs[1] > lrs[2]
+
+
+def test_cosine_schedule():
+    f = cosine(1.0, total_steps=100, warmup_steps=10)
+    assert float(f(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(f(jnp.asarray(10))), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(f(jnp.asarray(100))), 0.0, atol=1e-6)

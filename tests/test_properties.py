@@ -1,0 +1,146 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import MoECfg
+from repro.core import routing as R
+from repro.kernels import ref
+from repro.models.attention import flash_attention, reference_attention
+
+hp.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hp.HealthCheck.too_slow],
+)
+hp.settings.load_profile("ci")
+
+
+@st.composite
+def routing_case(draw):
+    g = draw(st.sampled_from([8, 16, 32, 64]))
+    E = draw(st.sampled_from([2, 4, 8]))
+    k = draw(st.integers(1, min(E, 3)))
+    c = draw(st.sampled_from([0.5, 1.0, 2.0, float(E)]))
+    seed = draw(st.integers(0, 2 ** 16))
+    return g, E, k, c, seed
+
+
+@hp.given(routing_case())
+def test_top_k_invariants(case):
+    g, E, k, c, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, g, E))
+    moe = MoECfg(num_experts=E, router="top_k", top_k=k, capacity_factor=c)
+    r = R.route_top_k(logits, moe)
+    cap = r.token_idx.shape[-1]
+    tok = np.asarray(r.token_idx[0])
+    comb = np.asarray(r.combine[0])
+    # every slot: either valid token with weight in (0, 1] or empty with 0
+    valid = tok < g
+    assert (comb[~valid] == 0).all()
+    assert (comb[valid] >= 0).all() and (comb[valid] <= 1 + 1e-6).all()
+    # per-token slot count <= k
+    counts = np.bincount(tok[valid].ravel(), minlength=g)
+    assert (counts <= k).all()
+    # capacity respected per expert (no duplicate positions by constr.)
+    assert tok.shape == (E, cap)
+    # dropped_frac consistent with counts
+    dropped = float((counts == 0).mean())
+    np.testing.assert_allclose(float(r.dropped_frac), dropped, atol=1e-6)
+
+
+@hp.given(routing_case())
+def test_expert_choice_invariants(case):
+    g, E, _, c, seed = case
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, g, E))
+    moe = MoECfg(num_experts=E, router="expert_choice", capacity_factor=c)
+    r = R.route_expert_choice(logits, moe)
+    cap = r.token_idx.shape[-1]
+    assert cap == R.capacity(g, moe)
+    tok = np.asarray(r.token_idx[0])
+    # EC: every expert processes exactly cap distinct tokens
+    for e in range(E):
+        assert len(set(tok[e].tolist())) == cap
+    # probabilities are a distribution per token
+    p = np.asarray(r.probs[0])
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+
+
+@hp.given(
+    st.integers(0, 2 ** 16),
+    st.sampled_from([(1, 24, 4, 2, 8), (2, 16, 4, 4, 16),
+                     (1, 33, 8, 2, 8)]),
+    st.booleans(),
+)
+def test_flash_equals_reference(seed, dims, causal):
+    B, S, H, Kh, dh = dims
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Kh, dh))
+    v = jax.random.normal(ks[2], (B, S, Kh, dh))
+    got = flash_attention(q, k, v, causal=causal, q_chunk=8, kv_chunk=8)
+    want = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=5e-5, rtol=5e-5
+    )
+
+
+@hp.given(st.integers(0, 2 ** 16), st.sampled_from([4, 8, 16]))
+def test_rwkv_chunk_size_invariance(seed, chunk):
+    """Output must not depend on the chunking (chunked == sequential)."""
+    from repro.kernels.ops import _rwkv6_chunked_xla
+
+    B, T, H, K, V = 1, 24, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, V)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    o1, s1 = ref.rwkv6_ref(r, k, v, w, u)
+    o2, s2 = _rwkv6_chunked_xla(r, k, v, w, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=2e-4, rtol=1e-3)
+
+
+@hp.given(st.integers(0, 2 ** 16), st.sampled_from([1, 3, 8, 32]))
+def test_chunked_ce_matches_full(seed, chunk):
+    from repro.models.model_zoo import _chunked_ce
+
+    B, S, d, V = 2, 16, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hid = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, V)) * 0.3
+    tgt = jax.random.randint(ks[2], (B, S), -1, V)
+    got = _chunked_ce(hid, w, tgt, chunk)
+    logits = hid @ w
+    logp = jax.nn.log_softmax(logits)
+    valid = tgt >= 0
+    ce_tok = -jnp.take_along_axis(
+        logp, jnp.maximum(tgt, 0)[..., None], axis=-1
+    )[..., 0]
+    want = jnp.where(valid, ce_tok, 0).sum() / jnp.maximum(valid.sum(), 1)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@hp.given(st.integers(0, 2 ** 16))
+def test_combine_renorm_partition_of_unity(seed):
+    """Renormed combine weights of selected tokens sum to exactly 1."""
+    g, E = 32, 4
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, g, E))
+    moe = MoECfg(num_experts=E, router="expert_choice",
+                 capacity_factor=2.0, normalize_combine_weights=True)
+    r = R.route_expert_choice(logits, moe)
+    tok = np.asarray(r.token_idx[0])
+    comb = np.asarray(r.combine[0])
+    sums = np.zeros(g)
+    for e in range(E):
+        for c in range(tok.shape[1]):
+            sums[tok[e, c]] += comb[e, c]
+    selected = sums > 0
+    np.testing.assert_allclose(sums[selected], 1.0, atol=1e-5)

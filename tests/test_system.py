@@ -1,0 +1,157 @@
+"""End-to-end system behaviour: the full upcycling workflow
+(pretrain dense -> checkpoint -> surgery -> continue training -> serve)
+plus a multi-device distributed-equivalence test run in a subprocess
+(device count must be forced before jax initializes).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MoECfg, get_reduced
+from repro.core.upcycle import upcycle_opt_state, upcycle_params
+from repro.data import make_iterator
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.optim import adafactor, inverse_sqrt
+from repro.training import TrainConfig, Trainer
+
+
+@pytest.mark.slow
+def test_full_upcycling_workflow(tmp_path):
+    """The paper's usage pattern end to end, at toy scale."""
+    dense_cfg = get_reduced("tinyllama-1.1b")
+    opt = adafactor(inverse_sqrt(peak=0.01, warmup_steps=20))
+
+    # 1) pretrain the dense model
+    it = make_iterator(dense_cfg, global_batch=8, seq_len=32,
+                       host_index=0, host_count=1)
+    tr = Trainer(dense_cfg, opt, it, str(tmp_path / "dense"),
+                 tc=TrainConfig(checkpoint_every=20, log_every=1000),
+                 log_fn=lambda s: None)
+    out = tr.run(40)
+    dense_state = out["state"]
+
+    # 2) surgery: wrap values back into Param trees via a fresh init's axes
+    wrapped = zoo.init_params(jax.random.PRNGKey(0), dense_cfg)
+    _, axes = pm.split(wrapped)
+    dense_wrapped = pm.wrap(dense_state["params"], axes)
+    sparse_cfg = dataclasses.replace(
+        dense_cfg,
+        name="tinyllama-upcycled",
+        moe=MoECfg(num_experts=4, router="top_k", top_k=2,
+                   capacity_factor=2.0, layer_pattern="every_other",
+                   group_size=64),
+    )
+    sparse_wrapped = upcycle_params(
+        dense_wrapped, dense_cfg, sparse_cfg, jax.random.PRNGKey(11)
+    )
+    sparse_params, _ = pm.split(sparse_wrapped)
+
+    # 3) optimizer-state upcycling + schedule continuation
+    sparse_state = {
+        "params": sparse_params,
+        "opt_state": upcycle_opt_state(
+            opt.init(sparse_params), dense_state["opt_state"],
+            dense_cfg, sparse_cfg,
+        ),
+        "step": dense_state["step"],
+    }
+    assert int(sparse_state["step"]) == 40
+
+    # 4) continue training the upcycled model
+    it2 = make_iterator(sparse_cfg, global_batch=8, seq_len=32,
+                        host_index=0, host_count=1)
+    it2.restore({"step": 40})
+    tr2 = Trainer(sparse_cfg, opt, it2, str(tmp_path / "sparse"),
+                  tc=TrainConfig(checkpoint_every=50, log_every=1000),
+                  log_fn=lambda s: None)
+    tr2.manager.save(40, sparse_state, metadata={"data": it2.state()})
+    out2 = tr2.run(50)
+    assert int(out2["state"]["step"]) == 50
+    assert np.isfinite(float(out2["metrics"]["loss"]))
+
+    # 5) serve the upcycled model
+    from repro.training.serve import ServeConfig, ServeEngine
+
+    eng = ServeEngine(out2["state"]["params"], sparse_cfg,
+                      ServeConfig(max_batch=2, max_len=64))
+    gen = eng.generate([[1, 2, 3]], max_new=4)
+    assert len(gen[0]) == 7
+
+
+DISTRIBUTED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_debug_mesh
+    from repro.optim import adafactor, constant
+    from repro.sharding import ShardCtx, tree_shardings
+    from repro.training.train_loop import (
+        init_train_state, make_train_step, state_axes)
+    from repro.data import make_iterator
+
+    cfg = get_reduced("granite-moe-1b-a400m")
+    opt = adafactor(constant(1e-2))
+    it = make_iterator(cfg, global_batch=8, seq_len=32, host_index=0,
+                       host_count=1)
+    batch = next(it)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+    # single-device result
+    step1 = jax.jit(make_train_step(cfg, opt))
+    s1, m1 = step1(state, batch)
+
+    # 8-device (2,4) mesh result with the full sharding machinery
+    mesh = make_debug_mesh((2, 4), ("data", "model"))
+    ctx = ShardCtx.for_mesh(mesh)
+    axes = state_axes(cfg)
+    sh = tree_shardings(axes, jax.eval_shape(lambda: state), mesh,
+                        ctx.param_rules)
+    state_d = jax.device_put(state, sh)
+    batch_d = jax.device_put(
+        batch,
+        tree_shardings(
+            {k: "batch seq" if v.ndim == 2 else "batch"
+             for k, v in batch.items()},
+            batch, mesh, ctx.act_rules,
+        ),
+    )
+    step8 = jax.jit(make_train_step(cfg, opt, ctx=ctx))
+    with mesh:
+        s8, m8 = step8(state_d, batch_d)
+    np.testing.assert_allclose(
+        float(m1["loss"]), float(m8["loss"]), rtol=2e-4)
+    a = jax.tree.leaves(s1["params"])[1]
+    b = jax.tree.leaves(s8["params"])[1]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=2e-3)
+    print("DISTRIBUTED_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_distributed_step_matches_single_device():
+    """GSPMD-sharded MoE train step == single device.
+
+    Runs in a subprocess because the 8-device forcing must happen before
+    jax initializes.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", DISTRIBUTED_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DISTRIBUTED_OK" in r.stdout
