@@ -1,7 +1,16 @@
 """Kernel micro-benchmarks (CPU wall-time for the XLA paths; the Pallas
 kernels are TPU-targeted and validated for correctness in interpret mode —
-their perf effect is modeled in the roofline, benchmarks/roofline.py)."""
+their perf effect is modeled in the roofline, benchmarks/roofline.py).
+
+Forward AND fwd+bwd (``jax.value_and_grad``) timings for the two training
+hot spots, so backward-path regressions show up next to the forward ones.
+Set ``REPRO_BENCH_SMOKE=1`` (scripts/verify.sh) for a seconds-scale run at
+reduced shapes that still exercises the Pallas custom-VJP kernels in
+interpret mode.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -9,45 +18,108 @@ import jax.numpy as jnp
 from benchmarks.common import timed
 from repro.kernels import ops
 
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
 
     # expert FFN: XLA grouped einsum vs per-expert loop oracle
-    E, cap, d, f = 8, 256, 256, 512
+    E, cap, d, f = (4, 64, 64, 128) if SMOKE else (8, 256, 256, 512)
+    reps = 3 if SMOKE else 10
     ks = jax.random.split(key, 4)
     xe = jax.random.normal(ks[0], (1, E, cap, d), jnp.float32)
     wi = jax.random.normal(ks[1], (E, d, f)) * 0.05
     wg = jax.random.normal(ks[2], (E, d, f)) * 0.05
     wo = jax.random.normal(ks[3], (E, f, d)) * 0.05
     fx = jax.jit(lambda x: ops.expert_ffn(x, wi, wg, wo, act="silu"))
-    us = timed(fx, xe, n=10)
+    us = timed(fx, xe, n=reps)
     flops = 1 * E * cap * (2 * d * f * 2 + 2 * f * d)
     rows.append((
         "kernels/expert_ffn_xla", us,
         f"gflops_per_s={flops / us / 1e3:.2f}",
     ))
 
+    # fwd+bwd: value_and_grad through the XLA path (dx + dwi + dwg + dwo).
+    def ffn_loss(x, wi, wg, wo):
+        return jnp.sum(
+            ops.expert_ffn(x, wi, wg, wo, act="silu") ** 2
+        )
+
+    fg = jax.jit(jax.value_and_grad(ffn_loss, argnums=(0, 1, 2, 3)))
+    us_g = timed(fg, xe, wi, wg, wo, n=reps)
+    # bwd ≈ 2x fwd matmuls + 1x activation recompute (see roofline.py)
+    rows.append((
+        "kernels/expert_ffn_xla_fwd_bwd", us_g,
+        f"vs_fwd={us_g / us:.2f}x gflops_per_s={3 * flops / us_g / 1e3:.2f}",
+    ))
+
+    # Pallas custom-VJP backward kernels, interpret mode (correctness-path
+    # timing only — compiled perf is TPU-side; keep shapes tiny).
+    Ep, capp, dp, fp = 2, 32, 32, 64
+    xs = jax.random.normal(ks[0], (1, Ep, capp, dp), jnp.float32)
+    wis = jax.random.normal(ks[1], (Ep, dp, fp)) * 0.05
+    wgs = jax.random.normal(ks[2], (Ep, dp, fp)) * 0.05
+    wos = jax.random.normal(ks[3], (Ep, fp, dp)) * 0.05
+
+    def ffn_loss_p(x, wi, wg, wo):
+        return jnp.sum(
+            ops.expert_ffn(x, wi, wg, wo, act="silu",
+                           implementation="pallas") ** 2
+        )
+
+    fgp = jax.jit(jax.value_and_grad(ffn_loss_p, argnums=(0, 1, 2, 3)))
+    us_gp = timed(fgp, xs, wis, wgs, wos, n=2)
+    rows.append((
+        "kernels/expert_ffn_pallas_interpret_fwd_bwd", us_gp,
+        "custom_vjp_kernels=dx+dw",
+    ))
+
     # flash attention XLA chunked vs full-materialization reference
-    B, S, H, Kh, dh = 2, 1024, 8, 2, 64
+    B, S, H, Kh, dh = (1, 256, 4, 2, 32) if SMOKE else (2, 1024, 8, 2, 64)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, Kh, dh), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, Kh, dh), jnp.float32)
+    chunk = 128 if SMOKE else 256
     ff = jax.jit(lambda q, k, v: ops.flash_attention(
-        q, k, v, causal=True, q_chunk=256, kv_chunk=256))
+        q, k, v, causal=True, q_chunk=chunk, kv_chunk=chunk))
     fr = jax.jit(lambda q, k, v: ops.flash_attention(
         q, k, v, causal=True, implementation="ref"))
-    us_f = timed(ff, q, k, v, n=10)
-    us_r = timed(fr, q, k, v, n=10)
+    us_f = timed(ff, q, k, v, n=reps)
+    us_r = timed(fr, q, k, v, n=reps)
     rows.append((
         "kernels/flash_attention_xla", us_f,
         f"vs_full_materialization={us_r / us_f:.2f}x",
     ))
 
+    def attn_loss(q, k, v):
+        return jnp.sum(ops.flash_attention(
+            q, k, v, causal=True, q_chunk=chunk, kv_chunk=chunk) ** 2)
+
+    fag = jax.jit(jax.value_and_grad(attn_loss, argnums=(0, 1, 2)))
+    us_ag = timed(fag, q, k, v, n=reps)
+    rows.append((
+        "kernels/flash_attention_xla_fwd_bwd", us_ag,
+        f"vs_fwd={us_ag / us_f:.2f}x",
+    ))
+
+    qs, ks_, vs = q[:, :64], k[:, :64], v[:, :64]
+
+    def attn_loss_p(q, k, v):
+        return jnp.sum(ops.flash_attention(
+            q, k, v, causal=True, implementation="pallas") ** 2)
+
+    fagp = jax.jit(jax.value_and_grad(attn_loss_p, argnums=(0, 1, 2)))
+    us_agp = timed(fagp, qs, ks_, vs, n=2)
+    rows.append((
+        "kernels/flash_attention_pallas_interpret_fwd_bwd", us_agp,
+        "custom_vjp_kernels=dq+dkv",
+    ))
+
     # rwkv6: chunked-parallel vs sequential scan
-    B, T, Hh, K = 1, 512, 8, 64
+    B, T, Hh, K = (1, 128, 4, 32) if SMOKE else (1, 512, 8, 64)
     ks = jax.random.split(key, 5)
     r = jax.random.normal(ks[0], (B, T, Hh, K)) * 0.5
     kk = jax.random.normal(ks[1], (B, T, Hh, K)) * 0.5
@@ -56,8 +128,8 @@ def run() -> list[tuple[str, float, str]]:
     u = jax.random.normal(ks[4], (Hh, K)) * 0.3
     fc = jax.jit(lambda *a: ops.rwkv6(*a, chunk=64)[0])
     fs = jax.jit(lambda *a: ops.rwkv6(*a, implementation="ref")[0])
-    us_c = timed(fc, r, kk, vv, w, u, n=5)
-    us_s = timed(fs, r, kk, vv, w, u, n=5)
+    us_c = timed(fc, r, kk, vv, w, u, n=2 if SMOKE else 5)
+    us_s = timed(fs, r, kk, vv, w, u, n=2 if SMOKE else 5)
     rows.append((
         "kernels/rwkv6_chunked_xla", us_c,
         f"vs_sequential_scan={us_s / us_c:.2f}x",

@@ -5,6 +5,12 @@ into the per-(arch x shape x mesh) three-term table of EXPERIMENTS.md
 
 Terms are seconds per chip on TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s ICI link); dominant term = the bottleneck the perf loop attacks.
+
+Also emits a static per-kernel fwd/bwd roofline for the two Pallas
+training kernels (expert FFN, flash attention): now that the backward
+pass is kernel-fused (custom VJP), the training step pays the backward
+FLOP terms through the same VMEM-resident kernels, so both directions
+are modeled.
 """
 from __future__ import annotations
 
@@ -13,6 +19,83 @@ import json
 import os
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+PEAK_FLOPS_BF16 = 197e12  # TPU v5e
+HBM_BW = 819e9
+
+
+def _roofline_row(name, flops, bytes_):
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_ / HBM_BW
+    t = max(t_c, t_m)
+    return (
+        name,
+        t * 1e6,
+        f"flops={flops:.3e} bytes={bytes_:.3e} "
+        f"ai={flops / bytes_:.0f} "
+        f"bound={'compute' if t_c >= t_m else 'memory'}",
+    )
+
+
+def kernel_rooflines() -> list[tuple[str, float, str]]:
+    """Fwd/bwd FLOP + HBM-byte model at a reference training shape.
+
+    Expert FFN (gated), per expert: fwd = 3 matmuls (wi, wg, wo) =
+    6*cap*d*f FLOPs. Bwd = dx kernel (recompute a/g/dh: 3 matmuls, expand
+    da/dg -> dx: 2) + dW kernel (recompute a/g/dh: 3, dwi/dwg/dwo: 3) =
+    16*cap*d*f — ~2.7x fwd (the flash-style recompute tax for keeping the
+    (cap, f) tensors in VMEM; residuals are the kernel inputs only).
+
+    Flash attention, per (b, h): fwd = qk^T + pv = 4*Sq*Skv*dh. Bwd =
+    dq kernel (s, dp, dq: 6*Sq*Skv*dh) + dkv kernel (s, dp, dk, dv:
+    8*Sq*Skv*dh) = 3.5x fwd.
+    """
+    rows = []
+    # Reference shapes: an 8-expert 1B-class MoE layer and a 4k-context
+    # attention layer, bf16 tensors (2 bytes).
+    #
+    # HBM bytes model the kernels AS TILED, not an ideal single-read
+    # lower bound: the expert-FFN grids re-stream the full weights once
+    # per cap tile (nc = cap/bc times) and the full-d x/dy rows once per
+    # f tile (nf = f/bf; twice in the two-phase dx kernel) — the weights
+    # (~0.5 GB here) cannot be VMEM-resident. That re-streaming is why
+    # larger (bc, bf) tiles and the ROADMAP tile auto-tuner matter.
+    E, cap, d, f = 8, 4096, 2048, 5632
+    bc, bf = 128, 256  # expert_mlp.py defaults
+    nc, nf = cap // bc, f // bf
+    ffn_fwd = E * 6 * cap * d * f
+    ffn_bwd = E * 16 * cap * d * f
+    w_bytes = E * 3 * d * f * 2
+    x_bytes = E * cap * d * 2
+    rows.append(_roofline_row(
+        # fwd: weights streamed per cap tile, x read once, y written once.
+        "roofline/kernel.expert_ffn.fwd", ffn_fwd,
+        nc * w_bytes + 2 * x_bytes,
+    ))
+    rows.append(_roofline_row(
+        # dx kernel: 2 phases -> 2*nf re-reads of x+dy, 2*nc of weights;
+        # dW kernel: nf re-reads of x+dy, nc of weights; writes dx + dW.
+        "roofline/kernel.expert_ffn.bwd", ffn_bwd,
+        3 * nf * 2 * x_bytes + 3 * nc * w_bytes + x_bytes + w_bytes,
+    ))
+    B, H, Sq, dh = 8, 16, 4096, 128
+    bq = 512  # flash_attention.py default
+    nq = Sq // bq
+    att_fwd = B * H * 4 * Sq * Sq * dh
+    att_bwd = B * H * 14 * Sq * Sq * dh
+    row_bytes = B * H * Sq * dh * 2  # one of q/k/v/o/do per head
+    rows.append(_roofline_row(
+        # fwd: k+v streamed per q tile, q read + o written once.
+        "roofline/kernel.flash_attention.fwd", att_fwd,
+        nq * 2 * row_bytes + 2 * row_bytes,
+    ))
+    rows.append(_roofline_row(
+        # dq kernel: k+v per q tile, q/do/dq once; dkv kernel: q+do per
+        # kv tile, k/v/dk/dv once; lse + delta are O(S) and ignored.
+        "roofline/kernel.flash_attention.bwd", att_bwd,
+        2 * nq * 2 * row_bytes + 7 * row_bytes,
+    ))
+    return rows
 
 
 def load(pattern: str = "*") -> list[dict]:
@@ -52,4 +135,5 @@ def run() -> list[tuple[str, float, str]]:
             "no artifacts — run: PYTHONPATH=src python -m "
             "repro.launch.dryrun --all",
         ))
+    rows.extend(kernel_rooflines())
     return rows

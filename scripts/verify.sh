@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# One-command local gate: tier-1 tests + kernel micro-bench smoke.
+#
+#   scripts/verify.sh [extra pytest args]
+#
+# Runs the ROADMAP tier-1 command (PYTHONPATH=src python -m pytest -x -q)
+# and then the kernel micro-benchmarks in smoke mode (REPRO_BENCH_SMOKE=1,
+# reduced shapes but the same code paths, including the Pallas custom-VJP
+# backward kernels in interpret mode) so perf-path regressions fail here
+# before they reach a TPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=()
+# Optional dep: property tests need hypothesis; skip the file when the
+# container doesn't ship it (matches the seed environment).
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  echo "[verify] hypothesis not installed; skipping tests/test_properties.py"
+  PYTEST_ARGS+=("--ignore=tests/test_properties.py")
+fi
+
+echo "[verify] tier-1: python -m pytest -x -q ${PYTEST_ARGS[*]:-} $*"
+python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
+
+echo "[verify] kernel micro-bench (smoke mode)"
+REPRO_BENCH_SMOKE=1 PYTHONPATH="$PYTHONPATH:." \
+  python -m benchmarks.run --only kernels_micro
+
+echo "[verify] OK"

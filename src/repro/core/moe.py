@@ -156,6 +156,12 @@ def moe_apply(
     if pad:
         y = y[:n]
     y = y.reshape(orig_shape).astype(x.dtype)
+    # Remat boundary tag: with stack_apply(remat="moe") only this combined
+    # output is saved for the backward; the dispatched (G, E, cap, d)
+    # buffers and router tensors above are recomputed.
+    from jax.ad_checkpoint import checkpoint_name
+
+    y = checkpoint_name(y, "moe_block")
 
     metrics = {
         "aux_loss": r.aux_loss * moe.aux_loss_weight,

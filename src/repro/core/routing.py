@@ -75,9 +75,9 @@ def route_expert_choice(logits: jax.Array, moe: MoECfg) -> Routing:
     sel = _scatter_add_groups(sel, token_idx, jnp.ones_like(combine))
     dropped = jnp.mean((sel[:, :g] == 0).astype(jnp.float32))
 
-    aux = jnp.zeros((), jnp.float32)  # EC is balanced by construction
-    if moe.aux_loss_weight:
-        aux = jnp.zeros((), jnp.float32)
+    # EC is perfectly load balanced by construction: no aux loss (the
+    # weighted zero keeps the metrics tree shape identical to Top-K).
+    aux = jnp.zeros((), jnp.float32)
     return Routing(
         token_idx=token_idx,
         combine=combine,

@@ -6,10 +6,13 @@ Every op takes ``implementation``:
                   lowering, and as the production fallback.
 * ``"pallas"``  — the Pallas TPU kernel (pl.pallas_call with BlockSpec VMEM
                   tiling). On CPU it runs in interpret mode for validation.
+                  Grad-enabled: expert FFN and flash attention route
+                  through ``jax.custom_vjp`` wrappers whose backward passes
+                  are themselves fused Pallas kernels, so ``jax.grad``
+                  through "pallas" never falls back to XLA einsums.
 * ``"ref"``     — the pure-jnp oracle from ref.py.
-
-The default is "xla" so the whole framework runs identically on CPU; launch
-configs flip perf-critical call-sites to "pallas" on TPU.
+* ``"auto"``    — ``default_implementation()``: "pallas" on TPU, "xla"
+                  elsewhere. The train loop's default.
 """
 from __future__ import annotations
 
@@ -23,8 +26,21 @@ from repro.kernels import ref as _ref
 INTERPRET_DEFAULT = jax.default_backend() == "cpu"
 
 
+def default_implementation() -> str:
+    """The training-grade default: fused Pallas kernels on TPU (forward
+    AND backward), XLA einsums everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(implementation: str) -> str:
+    if implementation == "auto":
+        return default_implementation()
+    return implementation
+
+
 def expert_ffn(xe, wi, wg, wo, *, act: str = "silu", implementation="xla"):
     """Grouped expert FFN. xe: (G, E, cap, d) or (E, cap, d)."""
+    implementation = _resolve(implementation)
     if implementation == "ref":
         return _ref.expert_ffn_ref(xe, wi, wg, wo, act=act)
     if implementation == "pallas":
@@ -35,7 +51,7 @@ def expert_ffn(xe, wi, wg, wo, *, act: str = "silu", implementation="xla"):
             xe = xe[None]
         G, E, cap, d = xe.shape
         y = jax.vmap(
-            lambda x: expert_mlp.expert_ffn_pallas(
+            lambda x: expert_mlp.expert_ffn_pallas_vjp(
                 x, wi, wg, wo, act=act, interpret=INTERPRET_DEFAULT
             )
         )(xe)
@@ -56,6 +72,7 @@ def flash_attention(
     q, k, v, *, causal=True, q_offset=0, kv_len=None,
     q_chunk=1024, kv_chunk=1024, implementation="xla",
 ):
+    implementation = _resolve(implementation)
     if implementation == "ref":
         return _ref.flash_attention_ref(
             q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len
@@ -63,7 +80,7 @@ def flash_attention(
     if implementation == "pallas":
         from repro.kernels import flash_attention as fa
 
-        return fa.flash_attention_pallas(
+        return fa.flash_attention_pallas_vjp(
             q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
             interpret=INTERPRET_DEFAULT,
         )
@@ -78,6 +95,10 @@ def flash_attention(
 def rwkv6(r, k, v, w, u, *, initial_state=None, chunk=64,
           implementation="xla"):
     """RWKV-6 WKV. Returns (out, final_state)."""
+    if implementation == "auto":
+        # No custom-VJP rwkv6 kernel yet (ROADMAP open item): "auto"
+        # stays on the chunked XLA path, which is differentiable.
+        implementation = "xla"
     if implementation == "ref":
         return _ref.rwkv6_ref(r, k, v, w, u, initial_state=initial_state)
     if implementation == "pallas":

@@ -1,0 +1,35 @@
+"""Shared tile-size policy for the Pallas TPU kernels.
+
+Two regimes:
+
+* interpret mode (CPU validation) — clamp blocks exactly to the dim so
+  tiny test shapes use tiny tiles.
+* compiled TPU — clamp blocks to the 128-aligned ceiling of the dim:
+  a dim smaller than the requested block is zero-padded up to ONE
+  MXU-aligned tile (the kernels' padding already guarantees zero rows
+  contribute zero, forward and backward), while an explicitly requested
+  misaligned block raises a clear error instead of an opaque Mosaic
+  lowering failure.
+"""
+from __future__ import annotations
+
+
+def clamp_tile(block: int, dim: int, interpret: bool) -> int:
+    if interpret:
+        return min(block, dim)
+    return min(block, -(-dim // 128) * 128)
+
+
+def check_mxu_alignment(kernel: str, interpret: bool, **tiles: int) -> None:
+    """Compiled TPU kernels need MXU-aligned tiles; interpret mode (the
+    CPU validation path) accepts anything."""
+    if interpret:
+        return
+    bad = {n: v for n, v in tiles.items() if v % 128}
+    if bad:
+        raise ValueError(
+            f"{kernel} Pallas tile sizes must be multiples of 128 (MXU "
+            f"lane width) when compiled for TPU; got {bad}. Pick aligned "
+            "block sizes (dims smaller than one block are padded "
+            "automatically), or run interpret=True."
+        )

@@ -14,22 +14,25 @@ over DCN. Axes:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+
+    _MESH_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: every axis is Auto already
+    AxisType = None
+    _MESH_KW = lambda n: {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_MESH_KW(len(axes)))
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_MESH_KW(len(axes)))
 
 
 # v5e hardware constants used by the roofline (benchmarks/roofline.py).

@@ -28,7 +28,15 @@ def main() -> None:
     ap.add_argument("--compression", default="none",
                     choices=["none", "bf16", "int8"])
     ap.add_argument("--remat", default="none",
-                    choices=["none", "full", "dots"])
+                    choices=["none", "full", "dots", "moe"],
+                    help="'moe' saves only MoE-block outputs — the Pallas "
+                         "VJP residuals, not full activations, set the "
+                         "memory high-water mark")
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "xla", "pallas", "ref"],
+                    help="kernel implementation for MoE expert FFN and "
+                         "attention; 'auto' = fused Pallas (fwd + "
+                         "custom-VJP bwd) on TPU, XLA einsums on CPU")
     ap.add_argument("--upcycle-from", default="",
                     help="dense checkpoint dir to sparse-upcycle from")
     ap.add_argument("--peak-lr", type=float, default=0.01)
@@ -73,8 +81,11 @@ def main() -> None:
         print(f"[train] upcycled from {args.upcycle_from} @ step {step}")
 
     sig = PreemptionSignal().install()
-    tr = Trainer(cfg, opt, it, args.ckpt_dir,
-                 ac=zoo.ApplyCfg(remat=args.remat), tc=tc, preemption=sig)
+    ac = zoo.ApplyCfg(remat=args.remat, moe_impl=args.impl,
+                      attn_impl=args.impl).resolve()
+    print(f"[train] kernels: moe={ac.moe_impl} attn={ac.attn_impl} "
+          f"remat={ac.remat}")
+    tr = Trainer(cfg, opt, it, args.ckpt_dir, ac=ac, tc=tc, preemption=sig)
     out = tr.run(args.steps, init_params=init_params)
     print(f"[train] finished at step {int(out['state']['step'])}, "
           f"loss {float(out['metrics']['loss']):.4f}")

@@ -179,12 +179,19 @@ def attention_apply(
     kv_chunk: int = 1024,
     ctx=None,
     pad_heads_multiple: int = 0,
+    implementation: str = "xla",
 ):
     """Self- or cross-attention.
 
     cache: None, or dict {k: (B, S_max, Kh, dh), v: ...} — functional KV
     cache. cache_index: current length (traced int32) where new kv is
     written. kv_x: encoder states for cross-attention (no cache/causality).
+
+    implementation: "xla" | "pallas" | "ref" | "auto" — the flash-attention
+    compute path (repro.kernels.ops.flash_attention). "pallas" is fully
+    differentiable (custom-VJP backward kernels), so training and prefill
+    both run through the fused kernels; single-query decode keeps the
+    distributed-softmax path regardless (seq-sharded KV caches).
 
     pad_heads_multiple: zero-pad query heads (and wo) up to a multiple of
     this, so head counts that don't divide the tensor-parallel mesh axis
@@ -272,13 +279,16 @@ def attention_apply(
         # so 500k caches shard over the `model` axis with no KV gather.
         y = _decode_attention(q, k, v, kv_len)
     else:
-        y = flash_attention(
+        from repro.kernels import ops
+
+        y = ops.flash_attention(
             q, k, v,
             causal=causal and kv_x is None,
             q_offset=q_offset,
             kv_len=kv_len,
             q_chunk=q_chunk,
             kv_chunk=kv_chunk,
+            implementation=implementation,
         )
     out = jnp.einsum("bshk,hkd->bsd", y, wo)
     return out, cache

@@ -37,12 +37,19 @@ from repro.sharding import ShardCtx, act
 
 @dataclasses.dataclass(frozen=True)
 class ApplyCfg:
-    """Runtime knobs (everything static at trace time)."""
+    """Runtime knobs (everything static at trace time).
+
+    The kernel implementation knobs (moe_impl, attn_impl) default to
+    "auto": fused Pallas kernels — forward AND custom-VJP backward — on
+    TPU, XLA einsums on CPU. ``resolve()`` pins "auto" to a concrete
+    backend at trace time.
+    """
 
     dispatch: str = "gather"  # moe dispatch: gather | einsum
-    moe_impl: str = "xla"  # xla | pallas | ref
+    moe_impl: str = "auto"  # auto | xla | pallas | ref
+    attn_impl: str = "auto"  # auto | xla | pallas | ref
     mixer_impl: str = "xla"
-    remat: str = "none"  # none | full | dots
+    remat: str = "none"  # none | full | dots | moe
     compute_dtype: str = "float32"  # float32 | bfloat16
     # Chunked cross-entropy: compute logits+CE in seq chunks under remat so
     # the (B, S, V) logits tensor is never materialized (0 = full logits;
@@ -55,6 +62,22 @@ class ApplyCfg:
     @property
     def cdtype(self):
         return jnp.bfloat16 if self.compute_dtype == "bfloat16" else jnp.float32
+
+    def resolve(self) -> "ApplyCfg":
+        """Pin "auto" impls to the backend default (pallas on TPU, xla on
+        CPU). Idempotent; called at every model entry point."""
+        from repro.kernels.ops import default_implementation
+
+        if self.moe_impl != "auto" and self.attn_impl != "auto":
+            return self
+        default = default_implementation()
+        return dataclasses.replace(
+            self,
+            moe_impl=default if self.moe_impl == "auto" else self.moe_impl,
+            attn_impl=(
+                default if self.attn_impl == "auto" else self.attn_impl
+            ),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +170,7 @@ def _encode(params, batch, cfg: ArchConfig, ac: ApplyCfg, ctx):
         mode="train", causal=False,
         router_kind=stk.stack_router_kind(cfg, stack="encoder"),
         dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
         ctx=ctx, remat=ac.remat,
@@ -164,6 +188,7 @@ def forward_train(
     return_hidden: bool = False,
 ):
     """Returns (logits, metrics); (hidden, metrics) if return_hidden."""
+    ac = ac.resolve()
     params = _cast_params(params, ac.cdtype)
     if cfg.structure == "encoder_only":
         x = frontend_apply(params["frontend"], batch["patch_embeds"], cfg)
@@ -175,6 +200,7 @@ def forward_train(
             mode="train", causal=False,
             router_kind=stk.stack_router_kind(cfg, stack="encoder"),
             dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+            attn_impl=ac.attn_impl,
             mixer_impl=ac.mixer_impl, ctx=ctx, remat=ac.remat,
         )
         x = norm_apply(params["final_norm"], x, cfg)
@@ -196,6 +222,7 @@ def forward_train(
         enc=enc, mode="train", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
         dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
         ctx=ctx, remat=ac.remat,
@@ -328,6 +355,7 @@ def prefill(
     ctx: Optional[ShardCtx] = None,
 ):
     """Run the full prompt, writing caches. Returns (cache, last_logits)."""
+    ac = ac.resolve()
     params = _cast_params(params, ac.cdtype)
     enc = None
     if cfg.structure == "encoder_decoder":
@@ -342,6 +370,7 @@ def prefill(
         mode="prefill", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
         dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
         ctx=ctx, remat=ac.remat,
@@ -366,6 +395,7 @@ def decode_step(
     ctx: Optional[ShardCtx] = None,
 ):
     """One autoregressive step. tokens: (B, 1). Returns (cache, logits)."""
+    ac = ac.resolve()
     params = _cast_params(params, ac.cdtype)
     enc = cache.get("enc") if cfg.structure == "encoder_decoder" else None
     x = embed_apply(
@@ -379,6 +409,7 @@ def decode_step(
         mode="decode", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
         dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
         ctx=ctx, remat="none",

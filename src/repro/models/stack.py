@@ -173,6 +173,7 @@ def layer_apply(
     dispatch: str = "gather",
     moe_impl: str = "xla",
     mixer_impl: str = "xla",
+    attn_impl: str = "xla",
     pad_heads_multiple: int = 0,
     ctx: Optional[ShardCtx] = None,
 ):
@@ -187,6 +188,7 @@ def layer_apply(
             cache_index=cache_index,
             ctx=ctx,
             pad_heads_multiple=pad_heads_multiple,
+            implementation=attn_impl,
         )
     elif desc.mixer == "mamba":
         y, mix_cache = ssm.mamba_apply(
@@ -204,6 +206,7 @@ def layer_apply(
         yc, _ = attention_apply(
             p["cross"], hc, cfg, kv_x=enc, causal=False, ctx=ctx,
             pad_heads_multiple=pad_heads_multiple,
+            implementation=attn_impl,
         )
         x = x + yc
 
@@ -348,9 +351,10 @@ def stack_apply(
     dispatch: str = "gather",
     moe_impl: str = "xla",
     mixer_impl: str = "xla",
+    attn_impl: str = "xla",
     pad_heads_multiple: int = 0,
     ctx: Optional[ShardCtx] = None,
-    remat: str = "none",  # none | full | dots
+    remat: str = "none",  # none | full | dots | moe
 ):
     segs = find_segments(descs)
     totals = zero_metrics()
@@ -383,6 +387,7 @@ def stack_apply(
                     dispatch=dispatch,
                     moe_impl=moe_impl,
                     mixer_impl=mixer_impl,
+                    attn_impl=attn_impl,
                     pad_heads_multiple=pad_heads_multiple,
                     ctx=ctx,
                 )
@@ -396,6 +401,19 @@ def stack_apply(
             body = jax.checkpoint(
                 body,
                 policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        elif remat == "moe":
+            # MoE-block-boundary remat: save ONLY the combined MoE layer
+            # outputs (tagged `moe_block` in core/moe.py). Everything else
+            # in the layer — attention activations, dispatched (G, E, cap,
+            # d) buffers, router tensors — is recomputed in the backward,
+            # so the step's memory high-water mark is set by the Pallas
+            # VJP residuals (kernel inputs), not full activations.
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "moe_block"
+                ),
             )
 
         x, (mets, seg_cache_new) = jax.lax.scan(

@@ -50,7 +50,14 @@ def make_train_step(
     ctx: Optional[ShardCtx] = None,
     tc: TrainConfig = TrainConfig(),
 ):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Kernel implementations come from ``ac`` (ApplyCfg): the default
+    "auto" resolves here — at step-build time, so the jitted step traces
+    with a concrete choice — to the fused Pallas forward+backward kernels
+    on TPU and the XLA einsum path on CPU.
+    """
+    ac = ac.resolve()
 
     def grads_of(params, batch):
         (loss, mets), grads = jax.value_and_grad(

@@ -6,12 +6,19 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 from repro.sharding import make_rules, spec_for
 
 
+def _abstract_mesh(shape, axes):
+    try:  # jax >= 0.5 signature: (axis_sizes, axis_names)
+        return AbstractMesh(shape, axes)
+    except TypeError:  # jax 0.4.x: ((name, size), ...)
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def mesh2():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh3():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def pr(mesh, **kw):
