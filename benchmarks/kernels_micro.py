@@ -21,6 +21,23 @@ from repro.kernels import ops
 SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
 
 
+def _ragged_rows(key, M, d, counts, bm):
+    """Random rows in the valid ragged segments, zeros on pad/tail rows —
+    the layout contract ops.grouped_mlp documents (zero rows are what
+    keep the Pallas dead-block skip and the XLA ragged_dot tail
+    numerically identical)."""
+    from repro.kernels.grouped_mlp import ragged_row_offsets
+
+    row_off, _ = ragged_row_offsets(counts, bm)  # (G, E+1)
+    rows_i = jnp.arange(M)[None, :, None]
+    in_seg = (
+        (rows_i >= row_off[:, None, :-1])
+        & (rows_i < row_off[:, None, :-1] + counts[:, None, :])
+    ).any(-1)
+    xs = jax.random.normal(key, (counts.shape[0], M, d), jnp.float32)
+    return xs * in_seg[..., None]
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -74,6 +91,94 @@ def run() -> list[tuple[str, float, str]]:
     rows.append((
         "kernels/expert_ffn_pallas_interpret_fwd_bwd", us_gp,
         "custom_vjp_kernels=dx+dw",
+    ))
+
+    # Sorted ragged dispatch (grouped GEMM) vs padded capacity buffer at
+    # capacity factors 1.0 / 1.25 / 2.0: the padded path's rows — and so
+    # its modeled AND measured (XLA cost-analysis) FLOPs — scale linearly
+    # with the capacity factor; the sorted buffer's static row count
+    # M = (ceil(g*k/bm) + E) * bm does not depend on it at all.
+    from repro.configs import MoECfg
+    from repro.core.routing import capacity as capacity_fn
+    from repro.kernels.grouped_mlp import ragged_buffer_rows
+
+    g_tok, E2, k2 = (128, 4, 1) if SMOKE else (512, 8, 1)  # switch-style
+    d2, f2 = (d, f)
+    bm = 8 if SMOKE else 32  # CPU-bench block; the TPU kernel uses 128
+    ks = jax.random.split(key, 4)
+    wi2 = jax.random.normal(ks[0], (E2, d2, f2)) * 0.05
+    wg2 = jax.random.normal(ks[1], (E2, d2, f2)) * 0.05
+    wo2 = jax.random.normal(ks[2], (E2, f2, d2)) * 0.05
+    n_assign = g_tok * k2
+    M = ragged_buffer_rows(n_assign, E2, bm)
+    counts = jnp.full((1, E2), n_assign // E2, jnp.int32)
+    xs_r = _ragged_rows(ks[3], M, d2, counts, bm)
+
+    def measured_flops(fn, *a):
+        ca = fn.lower(*a).compile().cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        return float(ca.get("flops", 0.0)) if ca else 0.0
+
+    f_sort = jax.jit(lambda x, c: ops.grouped_mlp(
+        x, wi2, wg2, wo2, c, act="silu", block=bm))
+    us_sort = timed(f_sort, xs_r, counts, n=reps)
+    mf_sort = measured_flops(f_sort, xs_r, counts)
+    for cf in (1.0, 1.25, 2.0):
+        moe = MoECfg(num_experts=E2, top_k=k2, capacity_factor=cf)
+        cap2 = capacity_fn(g_tok, moe)
+        xe_p = jax.random.normal(ks[3], (1, E2, cap2, d2), jnp.float32)
+        f_pad = jax.jit(lambda x: ops.expert_ffn(
+            x, wi2, wg2, wo2, act="silu"))
+        us_pad = timed(f_pad, xe_p, n=reps)
+        mf_pad = measured_flops(f_pad, xe_p)
+        model_pad = E2 * cap2 * 6 * d2 * f2
+        model_sort = M * 6 * d2 * f2  # static rows: cf-independent
+        # Raw per-path numbers so the trend is visible in the CSV: padded
+        # model+measured FLOPs grow ~linearly in cf, the sorted column is
+        # CONSTANT. (The sorted measured term uses XLA's CPU lowering of
+        # ragged_dot, which expands to a dense per-expert loop — inflated
+        # by ~E vs the model, but still exactly cf-independent; the TPU
+        # kernel's live compute tracks the model.)
+        rows.append((
+            f"kernels/moe_dispatch_cf{cf}", us_pad,
+            f"padded_us={us_pad:.0f} sorted_us={us_sort:.0f} "
+            f"padded_rows={E2 * cap2} sorted_rows={M} "
+            f"padded_model_mflops={model_pad / 1e6:.1f} "
+            f"sorted_model_mflops={model_sort / 1e6:.1f} "
+            f"padded_measured_mflops={mf_pad / 1e6:.1f} "
+            f"sorted_measured_mflops={mf_sort / 1e6:.1f}",
+        ))
+
+    # grouped-GEMM fwd+bwd: XLA ragged_dot path and the Pallas custom-VJP
+    # kernels in interpret mode (correctness-path timing only).
+    def gm_loss(x, wi, wg, wo):
+        return jnp.sum(ops.grouped_mlp(
+            x, wi, wg, wo, counts, act="silu", block=bm) ** 2)
+
+    gm_g = jax.jit(jax.value_and_grad(gm_loss, argnums=(0, 1, 2, 3)))
+    us_gm = timed(gm_g, xs_r, wi2, wg2, wo2, n=reps)
+    rows.append((
+        "kernels/grouped_mlp_xla_fwd_bwd", us_gm,
+        f"vs_fwd={us_gm / us_sort:.2f}x rows={M}",
+    ))
+
+    Ms = ragged_buffer_rows(32, 2, 8)
+    cs_s = jnp.full((1, 2), 16, jnp.int32)
+    xs_s = _ragged_rows(ks[3], Ms, 32, cs_s, 8)
+    wis = jax.random.normal(ks[0], (2, 32, 64)) * 0.05
+    wgs = jax.random.normal(ks[1], (2, 32, 64)) * 0.05
+    wos = jax.random.normal(ks[2], (2, 64, 32)) * 0.05
+
+    def gm_loss_p(x, wi, wg, wo):
+        return jnp.sum(ops.grouped_mlp(
+            x, wi, wg, wo, cs_s, act="silu", block=8,
+            implementation="pallas") ** 2)
+
+    gm_gp = jax.jit(jax.value_and_grad(gm_loss_p, argnums=(0, 1, 2, 3)))
+    us_gmp = timed(gm_gp, xs_s, wis, wgs, wos, n=2)
+    rows.append((
+        "kernels/grouped_mlp_pallas_interpret_fwd_bwd", us_gmp,
+        "custom_vjp_kernels=dx+dw scalar_prefetch=block_tables",
     ))
 
     # flash attention XLA chunked vs full-materialization reference

@@ -78,6 +78,61 @@ def kernel_rooflines() -> list[tuple[str, float, str]]:
         "roofline/kernel.expert_ffn.bwd", ffn_bwd,
         3 * nf * 2 * x_bytes + 3 * nc * w_bytes + x_bytes + w_bytes,
     ))
+    # Grouped-GEMM (sorted ragged dispatch) vs the padded capacity
+    # buffer, same E/d/f, one routing group of g = 4096 tokens, top-2,
+    # under a skewed expert load (top expert draws ~30% of assignments —
+    # the upcycled-MoE imbalance regime the capacity factor exists to
+    # absorb). Padded FLOPs/bytes follow E*cap = cf*g rows; ragged live
+    # FLOPs follow the FILLED (block-aligned) rows only — independent of
+    # cf once every expert saturates — while ragged bytes follow the
+    # static buffer M (dead blocks are skipped for compute but still
+    # streamed; see kernels/grouped_mlp.py).
+    g_tok, k, bm = 4096, 2, 128
+    fracs = [0.30, 0.20, 0.15, 0.10, 0.08, 0.07, 0.06, 0.04]  # E = 8
+    M = (-(-g_tok * k // bm) + E) * bm
+    rag_w_bytes = (M // bm) * 3 * d * f * 2
+    rag_x_bytes = M * d * 2
+    rag_bytes_fwd = rag_w_bytes + 2 * rag_x_bytes
+    for cf in (1.0, 1.25, 2.0):
+        cap_cf = -(-int(g_tok * cf) // E)
+        counts = [min(int(fr * k * g_tok), cap_cf) for fr in fracs]
+        live = sum(max(1, -(-c // bm)) * bm for c in counts)
+        pad_rows = E * cap_cf
+        pad_flops = 6 * pad_rows * d * f
+        rag_flops = 6 * live * d * f
+        pad_bytes = -(-cap_cf // bc) * E * 3 * d * f * 2 \
+            + 2 * pad_rows * d * 2
+        rows.append((
+            f"roofline/kernel.grouped_mlp.cf{cf}",
+            0.0,
+            f"padded_rows={pad_rows} ragged_live_rows={live} "
+            f"flops_ratio_padded_over_ragged={pad_flops / rag_flops:.2f} "
+            f"bytes_ratio={pad_bytes / rag_bytes_fwd:.2f} "
+            f"ragged_static_rows={M} (cf-independent)",
+        ))
+    # fwd/bwd rooflines for the grouped kernel at the cf=2.0 point: same
+    # per-row FLOP family as expert_ffn (6x fwd, 16x bwd recompute tax),
+    # bytes follow the static buffer + per-block weight streaming.
+    cap2 = -(-int(g_tok * 2.0) // E)
+    live2 = sum(
+        max(1, -(-min(int(fr * k * g_tok), cap2) // bm)) * bm
+        for fr in fracs
+    )
+    rows.append(_roofline_row(
+        "roofline/kernel.grouped_mlp.fwd", 6 * live2 * d * f,
+        rag_bytes_fwd,
+    ))
+    nf = f // bf
+    rows.append(_roofline_row(
+        # Same convention as kernel.expert_ffn.bwd: the dx kernel
+        # re-streams full-d x/dy rows once per f tile in each of its two
+        # phases, the dW kernel once more (3*nf*2 x-passes total); weight
+        # tiles stream per row-block twice in dx, once in dW
+        # (3*rag_w_bytes); writes = dx (x-sized) + dW (weight-sized).
+        "roofline/kernel.grouped_mlp.bwd", 16 * live2 * d * f,
+        3 * rag_w_bytes + 3 * nf * 2 * rag_x_bytes
+        + rag_x_bytes + E * 3 * d * f * 2,
+    ))
     B, H, Sq, dh = 8, 16, 4096, 128
     bq = 512  # flash_attention.py default
     nq = Sq // bq

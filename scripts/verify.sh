@@ -24,8 +24,12 @@ fi
 echo "[verify] tier-1: python -m pytest -x -q ${PYTEST_ARGS[*]:-} $*"
 python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
-echo "[verify] kernel micro-bench (smoke mode)"
+echo "[verify] kernel micro-bench + roofline (smoke mode)"
+# kernels_micro exercises every ops.* implementation (including the
+# Pallas custom-VJP kernels in interpret mode and the grouped-GEMM
+# sorted-dispatch path at capacity factors 1.0/1.25/2.0); roofline keeps
+# the static per-kernel FLOP/byte models importable and consistent.
 REPRO_BENCH_SMOKE=1 PYTHONPATH="$PYTHONPATH:." \
-  python -m benchmarks.run --only kernels_micro
+  python -m benchmarks.run --only kernels_micro,roofline
 
 echo "[verify] OK"

@@ -1,20 +1,45 @@
 """The MoE layer: router + dispatch + expert FFN + combine.
 
-Two dispatch implementations:
+Three dispatch implementations (N = tokens/group g, A = assignments per
+token — top-k's k; rows below are per group, f = d_ff):
 
-* ``einsum`` — paper-era GShard-style one-hot matmul dispatch/combine
-  (the *faithful baseline*; O(g * E * cap * d) extra FLOPs).
-* ``gather`` — index gather/scatter dispatch (optimized; O(E * cap * d)).
+  ========  ==================  =======================  =================
+  dispatch  FFN rows processed  extra FLOPs vs dense     when to use
+  ========  ==================  =======================  =================
+  einsum    E*cap = C*g         one-hot dispatch AND     paper-faithful
+            (scales with C)     combine matmuls:         baseline, tiny
+                                O(g*E*cap*d) each        shapes, audits
+  gather    E*cap = C*g         none (gather/scatter     padded default:
+            (scales with C)     indexing only), but      expert-parallel
+                                zero-pad FFN FLOPs on    a2a sharding via
+                                unfilled slots           (G,E,cap,d) buf
+  sorted    g*A + O(E*bm)       none; FFN FLOPs track    perf path: C > 1
+            (independent of     *filled* rows only       or imbalanced
+            capacity factor C)  (ragged grouped GEMM)    Top-K; finetune/
+                                                         inference economy
+  ========  ==================  =======================  =================
 
-Expert FFN compute goes through ``repro.kernels.ops.expert_ffn`` which
-selects XLA einsums (default; used for CPU tests and dry-run lowering) or
-the fused Pallas TPU kernel.
+``einsum``/``gather`` build the padded ``(G, E, cap, d)`` capacity buffer
+and go through ``kernels.ops.expert_ffn``; ``sorted`` sorts the flat
+assignment stream by expert into a block-aligned ragged buffer
+``(G, M, d)`` (M independent of capacity factor) and goes through
+``kernels.ops.grouped_mlp`` — the scalar-prefetch Pallas grouped-GEMM
+kernel on TPU, per-group ``lax.ragged_dot`` on XLA. All three consume the
+same ``Routing`` decisions, so outputs/gradients agree to float tolerance
+(tests/test_moe.py parity sweeps).
 
-Sharding: dispatched buffers (G, E, cap, d) are constrained to
+Sharding: the padded paths constrain dispatched buffers (G, E, cap, d) to
 ``_ expert cap embed`` — with experts on the ``model`` mesh axis this makes
 GSPMD insert the all-to-alls of the paper's "expert partitioning"
 (§A.4). When E doesn't divide the axis (grok), the constraint degrades to
-replicated-expert + tensor-parallel d_ff via the rules engine.
+replicated-expert + tensor-parallel d_ff via the rules engine. The sorted
+path keeps the ragged token buffer batch-sharded (``batch seq embed`` —
+expert segment boundaries are dynamic, so the expert dim cannot be a
+sharding axis) and constrains the expert weights exactly like the padded
+paths: expert-resident when E divides ``model`` (GSPMD then gathers
+weights to the data shards — the expert-data/FSDP layout of the
+Llama-3-meets-MoE upcycling stack), else d_ff tensor-parallel. Full
+expert-parallel all-to-all stays the gather path's regime.
 """
 from __future__ import annotations
 
@@ -49,18 +74,13 @@ def moe_init(rng, cfg: ArchConfig, moe: MoECfg, *, dtype=jnp.float32):
     }
 
 
-def expert_ffn(experts, xe, cfg: ArchConfig, *, implementation="xla",
-               ctx: Optional[ShardCtx] = None):
-    """xe: (G, E, cap, d) -> (G, E, cap, d). Dispatches to kernels.ops.
-
-    Weights are constrained to their COMPUTE layout first: expert-resident
+def _compute_layout_weights(experts, ctx: Optional[ShardCtx]):
+    """Constrain expert weights to their COMPUTE layout: expert-resident
     ("expert _ _", one FSDP-style gather per layer) when E divides the
     `model` axis, else d_ff tensor-parallel. Without this GSPMD sometimes
     prefers replicating the token buffers over gathering the weights —
     ~4x more bytes at Jamba scale (EXPERIMENTS.md SPerf, jamba iteration 3).
-    """
-    from repro.kernels import ops
-
+    Shared by the padded (expert_ffn) and sorted (grouped_mlp) paths."""
     wi, wg, wo = experts["wi"], experts.get("wg"), experts["wo"]
     if ctx is not None:
         E = wi.shape[0]
@@ -73,11 +93,123 @@ def expert_ffn(experts, xe, cfg: ArchConfig, *, implementation="xla",
             wi = act(ctx, wi, "_ _ mlp")
             wo = act(ctx, wo, "_ mlp _")
             wg = act(ctx, wg, "_ _ mlp") if wg is not None else None
+    return wi, wg, wo
+
+
+def expert_ffn(experts, xe, cfg: ArchConfig, *, implementation="xla",
+               ctx: Optional[ShardCtx] = None):
+    """xe: (G, E, cap, d) -> (G, E, cap, d). Dispatches to kernels.ops."""
+    from repro.kernels import ops
+
+    wi, wg, wo = _compute_layout_weights(experts, ctx)
     return ops.expert_ffn(
         xe, wi, wg, wo,
         act=cfg.act,
         implementation=implementation,
     )
+
+
+def _sorted_dispatch(params, xg, r, cfg: ArchConfig, moe: MoECfg, *,
+                     ctx: Optional[ShardCtx], implementation: str,
+                     block: int):
+    """Sorted ragged dispatch: argsort the flat assignment stream by
+    expert, run the contiguous ragged buffer through the grouped-GEMM
+    kernel, unsort via scatter-add combine. Returns y (G, g, d).
+
+    The ragged buffer has ``M = (ceil(N/block) + E) * block`` rows — N is
+    the assignment count (g*k for token-choice), so FFN work is
+    independent of capacity factor; capacity only decides WHICH
+    assignments survive (the routers' keep masks, identical across
+    dispatch paths).
+    """
+    from repro.kernels import ops
+    from repro.kernels.grouped_mlp import (
+        ragged_buffer_rows,
+        ragged_row_offsets,
+    )
+
+    G, g, d = xg.shape
+    E = moe.num_experts
+
+    # Flat per-group assignment stream (token id, expert id, weight).
+    # Token-choice routers expose it token-major (G, g, k); Expert Choice
+    # slots are already expert-major and fully dense, so its slot table
+    # flattens directly.
+    if r.token_expert is not None:
+        A = r.token_expert.shape[-1]
+        tok = jnp.broadcast_to(
+            jnp.arange(g, dtype=jnp.int32)[None, :, None], (G, g, A)
+        ).reshape(G, g * A)
+        eid = r.token_expert.reshape(G, g * A)
+        w = r.token_weight.reshape(G, g * A)
+    else:
+        cap = r.token_idx.shape[-1]
+        eid = jnp.broadcast_to(
+            jnp.arange(E, dtype=jnp.int32)[:, None], (E, cap)
+        ).reshape(1, E * cap)
+        eid = jnp.broadcast_to(eid, (G, E * cap))
+        tok = r.token_idx.reshape(G, E * cap)
+        w = r.combine.reshape(G, E * cap)
+
+    N = tok.shape[1]
+    valid = (eid < E) & (tok < g)
+    key = jnp.where(valid, eid, E).astype(jnp.int32)
+
+    # Stable sort by expert (dropped assignments -> key E, past the last
+    # segment). Only the integer permutation goes through lax.sort; the
+    # differentiable weights follow via take_along_axis, so no gradient
+    # flows through the sort itself.
+    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (G, N))
+    _, perm = jax.lax.sort((key, iota), dimension=1, num_keys=1)
+    key_s = jnp.take_along_axis(key, perm, axis=1)
+    tok_s = jnp.take_along_axis(tok, perm, axis=1)
+    w_s = jnp.take_along_axis(w, perm, axis=1)
+    valid_s = key_s < E
+
+    # Group-local per-expert segment offsets (bincount/cumsum) and the
+    # block-aligned ragged destination of every surviving assignment.
+    counts = (key_s[..., None] == jnp.arange(E)).sum(1).astype(jnp.int32)
+    M = ragged_buffer_rows(N, E, block)
+    row_off, valid_off = ragged_row_offsets(counts, block)  # (G, E+1)
+    rank = (
+        jnp.arange(N, dtype=jnp.int32)[None]
+        - jnp.take_along_axis(valid_off, key_s, axis=1)
+    )
+    dest = jnp.where(
+        valid_s, jnp.take_along_axis(row_off, key_s, axis=1) + rank, M
+    )
+
+    # Ragged buffers: src maps ragged row -> group-local token (g = pad
+    # row), wr carries the combine weight (0 on pad rows). Row M is the
+    # trash row for dropped assignments.
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, N))
+    src = jnp.full((G, M + 1), g, jnp.int32).at[gi, dest].set(tok_s)[:, :M]
+    wr = (
+        jnp.zeros((G, M + 1), w_s.dtype)
+        .at[gi, dest].set(jnp.where(valid_s, w_s, 0.0))[:, :M]
+    )
+
+    gm = jnp.broadcast_to(jnp.arange(G)[:, None], (G, M))
+    pad_row = src >= g
+    xs = xg[gm, jnp.minimum(src, g - 1)]
+    xs = xs * (1.0 - pad_row[..., None].astype(xg.dtype))
+    # Ragged rows stay batch-sharded: expert boundaries are dynamic, so
+    # the expert dim cannot be a sharding axis here (see module docstring).
+    xs = act(ctx, xs, "batch seq embed")
+    wi, wg, wo = _compute_layout_weights(params["experts"], ctx)
+    ys = ops.grouped_mlp(
+        xs, wi, wg, wo, counts,
+        act=cfg.act, block=block, implementation=implementation,
+    )
+    # Combine: weight, unsort, scatter-add (duplicate token rows — one per
+    # surviving assignment — accumulate, exactly like the gather path).
+    ys = act(ctx, ys, "batch seq mlp")
+    yw = (ys * wr[..., None]).astype(xg.dtype)
+    y = jnp.zeros((G, g + 1, d), xg.dtype)
+    y = act(ctx, y, "batch seq mlp")
+    y = y.at[gm, src].add(yw)
+    y = act(ctx, y, "batch seq mlp")
+    return y[:, :g]
 
 
 def _group(x2d: jax.Array, group_size: int):
@@ -99,8 +231,15 @@ def moe_apply(
     dispatch: str = "gather",
     ctx: Optional[ShardCtx] = None,
     implementation: str = "xla",
+    sorted_block: int = 128,
 ):
-    """x: (B, S, d) or (N, d). Returns (y, metrics dict)."""
+    """x: (B, S, d) or (N, d). Returns (y, metrics dict).
+
+    ``dispatch``: "einsum" | "gather" (padded capacity buffer) | "sorted"
+    (ragged grouped GEMM; ``sorted_block`` is the row-block alignment of
+    the ragged buffer — 128 matches the TPU kernel's MXU tiles, tests use
+    smaller blocks to keep interpret-mode buffers tiny).
+    """
     router_kind = router_kind or moe.router
     orig_shape = x.shape
     x2d = x.reshape(-1, x.shape[-1])
@@ -149,6 +288,11 @@ def moe_apply(
         y = y.at[gi, r.token_idx].add(yw)
         y = act(ctx, y, "batch seq mlp")
         y = y[:, :g]
+    elif dispatch == "sorted":
+        y = _sorted_dispatch(
+            params, xg, r, cfg, moe,
+            ctx=ctx, implementation=implementation, block=sorted_block,
+        )
     else:
         raise ValueError(f"unknown dispatch {dispatch!r}")
 

@@ -5,9 +5,11 @@ top-k / capacity bookkeeping is local to each group, which bounds the
 routing working set and — on hardware — the all-to-all payloads.
 
 All routers return a ``Routing`` carrying integer dispatch indices, combine
-weights, and metrics. Two dispatch implementations live in core/moe.py:
-the paper-era one-hot einsum (faithful baseline) and gather/scatter
-(optimized).
+weights, and metrics. Three dispatch implementations live in core/moe.py:
+the paper-era one-hot einsum (faithful baseline), gather/scatter
+(optimized padded), and sorted ragged (grouped-GEMM, no capacity buffer).
+Token-choice routers additionally expose the token-major assignment view
+(``token_expert``/``token_weight``) the sorted path consumes.
 
 Shapes: x grouped as (G, g, d); router logits (G, g, E); expert buffers
 (G, E, cap, d).
@@ -36,6 +38,14 @@ class Routing(NamedTuple):
     z_loss: jax.Array  # scalar
     # Fraction of tokens processed by no expert (dropped) — scalar metric.
     dropped_frac: jax.Array
+    # Token-major assignments for the sorted ragged dispatch (token-choice
+    # routers only; None for Expert Choice, whose slot table is already
+    # expert-major and fully dense). (G, g, k) int32 expert id per
+    # assignment — id == E marks a capacity-dropped assignment — and the
+    # matching combine weight (0 where dropped). Mirrors the slot table
+    # exactly: same capacity claims, same drops, same weights.
+    token_expert: Optional[jax.Array] = None  # int32 (G, g, k)
+    token_weight: Optional[jax.Array] = None  # f32 (G, g, k)
 
 
 def router_init(rng, d_model: int, moe: MoECfg):
@@ -176,6 +186,8 @@ def route_top_k(
         aux_loss=aux,
         z_loss=_z_loss(logits) if moe.z_loss_weight else jnp.zeros(()),
         dropped_frac=dropped,
+        token_expert=jnp.where(keep, top_e, E).astype(jnp.int32),
+        token_weight=w,
     )
 
 

@@ -45,7 +45,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import check_mxu_alignment, clamp_tile
+from repro.kernels.tiling import (
+    check_mxu_alignment,
+    clamp_tile,
+    tune_expert_tiles,
+)
 
 
 def _act_fn(name: str):
@@ -55,9 +59,16 @@ def _act_fn(name: str):
 
 
 def _clamp_tiles(bc, bf, bd, cap, f, d, interpret):
-    """Interpret: tiles shrink to the dims (tiny test shapes). Compiled:
+    """Tile sizes default (None) to the VMEM budget model in tiling.py —
+    (128, 256, 512) for small d_model, bf=128 from d_model >= 4096.
+    Interpret: tiles shrink to the dims (tiny test shapes). Compiled:
     tiles clamp to the 128-aligned ceiling — small cap/f/d zero-pad up to
     one MXU tile — and explicitly misaligned tiles raise."""
+    if bc is None or bf is None or bd is None:
+        tc, tf, td = tune_expert_tiles(cap, f, d)
+        bc = tc if bc is None else bc
+        bf = tf if bf is None else bf
+        bd = td if bd is None else bd
     bc = clamp_tile(bc, cap, interpret)
     bf = clamp_tile(bf, f, interpret)
     bd = clamp_tile(bd, d, interpret)
@@ -124,7 +135,7 @@ def _pad_inputs(xe, wi, wg, wo, bc, bf, bd):
 )
 def expert_ffn_pallas(
     xe, wi, wg, wo, *, act: str = "silu",
-    bc: int = 128, bf: int = 256, bd: int = 512,
+    bc=None, bf=None, bd=None,
     interpret: bool = False,
 ):
     """xe: (E, cap, d) -> (E, cap, d). Forward only (no VJP registered —
@@ -328,7 +339,7 @@ def _dw_kernel(x_ref, wi_ref, wg_ref, wo_ref, dy_ref,
     static_argnames=("act", "bc", "bf", "bd", "interpret"),
 )
 def _expert_ffn_pallas_bwd(xe, wi, wg, wo, dy, *, act: str,
-                           bc: int, bf: int, bd: int, interpret: bool):
+                           bc, bf, bd, interpret: bool):
     """Returns (dx, dwi, dwg, dwo); dwg is None when wg is None."""
     E, cap, d = xe.shape
     f = wi.shape[-1]
@@ -469,7 +480,7 @@ def _expert_ffn_pallas_bwd(xe, wi, wg, wo, dy, *, act: str,
 
 
 @functools.lru_cache(maxsize=None)
-def _make_expert_ffn_vjp(act: str, bc: int, bf: int, bd: int,
+def _make_expert_ffn_vjp(act: str, bc, bf, bd,
                          interpret: bool, gated: bool):
     kw = dict(act=act, bc=bc, bf=bf, bd=bd, interpret=interpret)
 
@@ -508,7 +519,7 @@ def _make_expert_ffn_vjp(act: str, bc: int, bf: int, bd: int,
 
 def expert_ffn_pallas_vjp(
     xe, wi, wg, wo, *, act: str = "silu",
-    bc: int = 128, bf: int = 256, bd: int = 512,
+    bc=None, bf=None, bd=None,
     interpret: bool = False,
 ):
     """Differentiable fused expert FFN: the forward Pallas kernel with a

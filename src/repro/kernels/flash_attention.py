@@ -40,16 +40,25 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import check_mxu_alignment, clamp_tile
+from repro.kernels.tiling import (
+    check_mxu_alignment,
+    clamp_tile,
+    tune_attention_tiles,
+)
 
 NEG_INF = float("-inf")
 
 
-def _clamp_qk_tiles(bq, bk, Sq, Skv, interpret):
-    """Interpret: tiles shrink to the seq dims. Compiled: clamp to the
-    128-aligned ceiling (short/odd sequences zero-pad up to one MXU
-    tile); explicitly misaligned tiles raise a clear error instead of an
-    opaque Mosaic lowering failure."""
+def _clamp_qk_tiles(bq, bk, Sq, Skv, dh, interpret):
+    """Tile sizes default (None) to the VMEM budget model in tiling.py
+    ((512, 512) for ordinary head dims). Interpret: tiles shrink to the
+    seq dims. Compiled: clamp to the 128-aligned ceiling (short/odd
+    sequences zero-pad up to one MXU tile); explicitly misaligned tiles
+    raise a clear error instead of an opaque Mosaic lowering failure."""
+    if bq is None or bk is None:
+        tq, tk = tune_attention_tiles(Sq, Skv, dh)
+        bq = tq if bq is None else bq
+        bk = tk if bk is None else bk
     bq = clamp_tile(bq, Sq, interpret)
     bk = clamp_tile(bk, Skv, interpret)
     check_mxu_alignment("flash attention", interpret, bq=bq, bk=bk)
@@ -139,7 +148,7 @@ def _kernel(q_ref, k_ref, v_ref, qoff_ref, kvlen_ref, o_ref, lse_ref,
 )
 def flash_attention_pallas(
     q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
-    bq: int = 512, bk: int = 512, interpret: bool = False,
+    bq=None, bk=None, interpret: bool = False,
     return_residuals: bool = False,
 ):
     """q: (B, Sq, H, dh); k, v: (B, Skv, Kh, dh). GQA: H % Kh == 0.
@@ -152,7 +161,7 @@ def flash_attention_pallas(
     B, Sq, H, dh = q.shape
     _, Skv, Kh, _ = k.shape
     G = H // Kh
-    bq, bk = _clamp_qk_tiles(bq, bk, Sq, Skv, interpret)
+    bq, bk = _clamp_qk_tiles(bq, bk, Sq, Skv, dh, interpret)
     pq, pk = (-Sq) % bq, (-Skv) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
@@ -317,7 +326,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 )
 def _flash_attention_pallas_bwd(
     q, k, v, out, lse, do, q_offset, kv_len, *,
-    causal: bool, bq: int, bk: int, interpret: bool,
+    causal: bool, bq, bk, interpret: bool,
 ):
     """Returns (dq, dk, dv). ``lse`` is the padded residual from the
     forward; ``do`` the output cotangent (unpadded)."""
@@ -325,7 +334,7 @@ def _flash_attention_pallas_bwd(
     _, Skv, Kh, _ = k.shape
     G = H // Kh
     scale = dh ** -0.5
-    bq, bk = _clamp_qk_tiles(bq, bk, Sq, Skv, interpret)
+    bq, bk = _clamp_qk_tiles(bq, bk, Sq, Skv, dh, interpret)
     pq, pk = (-Sq) % bq, (-Skv) % bk
 
     # Δ = rowsum(dO * O): elementwise, done outside the kernels.
@@ -427,7 +436,7 @@ def _flash_attention_pallas_bwd(
 
 
 @functools.lru_cache(maxsize=None)
-def _make_flash_vjp(causal: bool, bq: int, bk: int, interpret: bool):
+def _make_flash_vjp(causal: bool, bq, bk, interpret: bool):
     kw = dict(causal=causal, bq=bq, bk=bk, interpret=interpret)
 
     @jax.custom_vjp
@@ -457,7 +466,7 @@ def _make_flash_vjp(causal: bool, bq: int, bk: int, interpret: bool):
 
 def flash_attention_pallas_vjp(
     q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
-    bq: int = 512, bk: int = 512, interpret: bool = False,
+    bq=None, bk=None, interpret: bool = False,
 ):
     """Differentiable flash attention: forward Pallas kernel + fused
     backward kernels via ``jax.custom_vjp``. Drop-in for

@@ -68,6 +68,59 @@ def expert_ffn(xe, wi, wg, wo, *, act: str = "silu", implementation="xla"):
     return jnp.einsum("...ecf,efd->...ecd", h, wo).astype(xe.dtype)
 
 
+def grouped_mlp(xs, wi, wg, wo, group_sizes, *, act: str = "silu",
+                block: int = 128, implementation="xla"):
+    """Grouped expert FFN over a sorted ragged token buffer — the
+    ``dispatch="sorted"`` hot path (no padded capacity buffer).
+
+    xs: (G, M, d) expert-sorted rows, each expert's segment padded to a
+    multiple of ``block`` rows (layout built by core/moe.py with
+    ``grouped_mlp.ragged_row_offsets``); group_sizes: (G, E) valid rows
+    per expert; padded/tail rows are zero and produce zero rows.
+
+    * ``pallas`` — scalar-prefetch grouped-GEMM kernel walking expert
+      boundaries (fwd + custom-VJP bwd), kernels/grouped_mlp.py.
+    * ``xla``    — per-group ``jax.lax.ragged_dot`` segment GEMMs (the
+      CPU/tests fallback; differentiable, dense-equivalent FLOPs).
+    * ``ref``    — one-hot einsum oracle (ref.py).
+    """
+    implementation = _resolve(implementation)
+    if implementation == "ref":
+        return _ref.grouped_mlp_ref(
+            xs, wi, wg, wo, group_sizes, block=block, act=act
+        )
+    if implementation == "pallas":
+        from repro.kernels import grouped_mlp as gm
+
+        return gm.grouped_mlp_pallas_vjp(
+            xs, wi, wg, wo, group_sizes, act=act, bm=block,
+            interpret=INTERPRET_DEFAULT,
+        )
+    return _grouped_mlp_xla(xs, wi, wg, wo, group_sizes, act=act,
+                            block=block)
+
+
+def _grouped_mlp_xla(xs, wi, wg, wo, group_sizes, *, act, block):
+    """Segment-GEMM fallback: one ``lax.ragged_dot`` chain per group
+    (``ragged_dot`` has no batching rule yet, and G is static/small).
+    Segment sizes are the block-ALIGNED row counts so they tile the
+    buffer exactly; aligned-pad rows are zero -> contribute zero, and
+    rows past the last segment are zeroed by ragged_dot itself."""
+    from repro.models.layers import activation
+
+    sizes = jnp.maximum(1, -(-group_sizes // block)) * block  # (G, E)
+    outs = []
+    for g in range(xs.shape[0]):
+        h = jax.lax.ragged_dot(xs[g], wi, sizes[g])
+        if wg is not None:
+            gt = jax.lax.ragged_dot(xs[g], wg, sizes[g])
+            h = activation(act)(h) * gt
+        else:
+            h = activation(act)(h)
+        outs.append(jax.lax.ragged_dot(h.astype(wo.dtype), wo, sizes[g]))
+    return jnp.stack(outs).astype(xs.dtype)
+
+
 def flash_attention(
     q, k, v, *, causal=True, q_offset=0, kv_len=None,
     q_chunk=1024, kv_chunk=1024, implementation="xla",

@@ -32,6 +32,35 @@ def expert_ffn_ref(xe, wi, wg, wo, *, act: str = "silu"):
     return y.astype(xe.dtype)
 
 
+def grouped_mlp_ref(xs, wi, wg, wo, group_sizes, *, block: int = 128,
+                    act: str = "silu"):
+    """Grouped-GEMM (sorted ragged dispatch) oracle.
+
+    xs: (G, M, d) expert-sorted block-aligned rows; group_sizes: (G, E)
+    valid rows per expert (segment e starts at the block-aligned offset,
+    see kernels/grouped_mlp.py). Per-row expert weights are selected with
+    a one-hot einsum — deliberately simple, FLOPs be damned.
+    """
+    f32 = jnp.float32
+    G, M, d = xs.shape
+    E = wi.shape[0]
+    aligned = jnp.maximum(1, -(-group_sizes // block)) * block
+    ends = jnp.cumsum(aligned, axis=-1)  # (G, E)
+    rows = jnp.arange(M, dtype=jnp.int32)
+    eid = (rows[None, :, None] >= ends[:, None, :]).sum(-1)
+    oh = jax.nn.one_hot(jnp.minimum(eid, E - 1), E, dtype=f32)  # (G, M, E)
+    h = jnp.einsum("gme,gmd,edf->gmf", oh, xs.astype(f32), wi.astype(f32))
+    if wg is not None:
+        g = jnp.einsum(
+            "gme,gmd,edf->gmf", oh, xs.astype(f32), wg.astype(f32)
+        )
+        h = _act(act)(h) * g
+    else:
+        h = _act(act)(h)
+    y = jnp.einsum("gme,gmf,efd->gmd", oh, h, wo.astype(f32))
+    return y.astype(xs.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None):
     """O(S^2) attention oracle (GQA-aware). Shapes as in models/attention."""
     from repro.models.attention import reference_attention

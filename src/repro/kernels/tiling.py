@@ -10,8 +10,23 @@ Two regimes:
   contribute zero, forward and backward), while an explicitly requested
   misaligned block raises a clear error instead of an opaque Mosaic
   lowering failure.
+
+Tile sizes themselves come from a VMEM budget model (``tune_expert_tiles``
+/ ``tune_attention_tiles``) rather than fixed defaults: each kernel
+family's worst-case resident f32 working set (scratch accumulators plus
+resident output windows — the terms the Mosaic pipeline cannot stream)
+is evaluated against the per-core VMEM budget and the tile sizes are
+halved, largest contributor first, until the model fits. The dW kernel's
+``6 * d * bf`` accumulator+output term is what drives ``bf`` down to 128
+at d_model >= 4096 (see kernels/README.md).
 """
 from __future__ import annotations
+
+# Per-core VMEM on the reference part (TPU v5e). The tuners keep the
+# modeled resident set under this; streamed input tiles are double-
+# buffered by the pipeline and counted once.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+MXU = 128
 
 
 def clamp_tile(block: int, dim: int, interpret: bool) -> int:
@@ -33,3 +48,77 @@ def check_mxu_alignment(kernel: str, interpret: bool, **tiles: int) -> None:
             "block sizes (dims smaller than one block are padded "
             "automatically), or run interpret=True."
         )
+
+
+def _align128(dim: int) -> int:
+    return -(-dim // 128) * 128
+
+
+def expert_tile_vmem_bytes(bc: int, bf: int, bd: int, d: int) -> int:
+    """Worst-case resident f32 bytes across the expert-FFN kernel family
+    (fwd / dx / dW; same model for the padded and the grouped ragged
+    kernels — ``bc`` is the row-block dim, cap-tile or bm).
+
+    Terms follow kernels/README.md: per-kernel scratch accumulators plus
+    the full-d resident output window, plus the (non-full-d) input tiles
+    the step actually touches. The dW kernel is modeled as its f32
+    accumulators + resident output blocks (``6 * dp * bf``) — the term
+    that forces bf=128 at d >= 4096.
+    """
+    dp = _align128(d)
+    fwd = bc * bd + 2 * bd * bf + bf * dp + 2 * bc * bf + bc * dp
+    dx = 3 * bc * bf + bc * dp + 2 * bc * bd + 3 * bd * bf
+    dw = 6 * dp * bf
+    return 4 * max(fwd, dx, dw)
+
+
+def tune_expert_tiles(
+    cap: int, f: int, d: int, *,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    bc: int = 128, bf: int = 256, bd: int = 512,
+) -> tuple[int, int, int]:
+    """Pick (bc, bf, bd) for the expert-FFN kernels from the VMEM model.
+
+    Starts from the historical defaults (128, 256, 512) and halves the
+    dominant contributors (bf, then bd, then bc) down to the 128-tile
+    floor until the modeled resident set fits ``budget_bytes``. Covers
+    the README case: d_model >= 4096 -> bf = 128.
+    """
+    while expert_tile_vmem_bytes(bc, bf, bd, d) > budget_bytes:
+        if bf > MXU:
+            bf //= 2
+        elif bd > MXU:
+            bd //= 2
+        elif bc > MXU:
+            bc //= 2
+        else:
+            break  # floor reached: d too large for this kernel family
+    return bc, bf, bd
+
+
+def attention_tile_vmem_bytes(bq: int, bk: int, dh: int) -> int:
+    """Worst-case resident f32 bytes across the flash-attention kernels
+    (fwd / dq / dkv). The dkv kernel dominates: q+do tiles, k/v tiles,
+    dk/dv f32 accumulators, and the (bq, bk) p/ds score tiles."""
+    dhp = _align128(dh)
+    fwd = 2 * bq * dhp + 2 * bk * dhp + bq * bk + 2 * bq
+    dq = fwd + bq * bk + bq * dhp
+    dkv = 2 * bq * dhp + 4 * bk * dhp + 2 * bq * bk
+    return 4 * max(fwd, dq, dkv)
+
+
+def tune_attention_tiles(
+    sq: int, skv: int, dh: int, *,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    bq: int = 512, bk: int = 512,
+) -> tuple[int, int]:
+    """Pick (bq, bk) for the flash-attention kernels from the VMEM model
+    (alternate halving, 128-tile floor)."""
+    while attention_tile_vmem_bytes(bq, bk, dh) > budget_bytes:
+        if bq >= bk and bq > MXU:
+            bq //= 2
+        elif bk > MXU:
+            bk //= 2
+        else:
+            break
+    return bq, bk

@@ -37,6 +37,13 @@ def main() -> None:
                     help="kernel implementation for MoE expert FFN and "
                          "attention; 'auto' = fused Pallas (fwd + "
                          "custom-VJP bwd) on TPU, XLA einsums on CPU")
+    ap.add_argument("--dispatch", default="gather",
+                    choices=["gather", "einsum", "sorted"],
+                    help="MoE dispatch: 'gather'/'einsum' build the "
+                         "padded (G, E, cap, d) capacity buffer; "
+                         "'sorted' routes via token-sorting into a "
+                         "ragged buffer + grouped-GEMM kernel (FFN "
+                         "FLOPs independent of capacity factor)")
     ap.add_argument("--upcycle-from", default="",
                     help="dense checkpoint dir to sparse-upcycle from")
     ap.add_argument("--peak-lr", type=float, default=0.01)
@@ -82,9 +89,10 @@ def main() -> None:
 
     sig = PreemptionSignal().install()
     ac = zoo.ApplyCfg(remat=args.remat, moe_impl=args.impl,
-                      attn_impl=args.impl).resolve()
+                      attn_impl=args.impl,
+                      dispatch=args.dispatch).resolve()
     print(f"[train] kernels: moe={ac.moe_impl} attn={ac.attn_impl} "
-          f"remat={ac.remat}")
+          f"dispatch={ac.dispatch} remat={ac.remat}")
     tr = Trainer(cfg, opt, it, args.ckpt_dir, ac=ac, tc=tc, preemption=sig)
     out = tr.run(args.steps, init_params=init_params)
     print(f"[train] finished at step {int(out['state']['step'])}, "

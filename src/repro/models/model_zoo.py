@@ -45,7 +45,7 @@ class ApplyCfg:
     backend at trace time.
     """
 
-    dispatch: str = "gather"  # moe dispatch: gather | einsum
+    dispatch: str = "gather"  # moe dispatch: gather | einsum | sorted
     moe_impl: str = "auto"  # auto | xla | pallas | ref
     attn_impl: str = "auto"  # auto | xla | pallas | ref
     mixer_impl: str = "xla"

@@ -34,11 +34,15 @@ class ServeEngine:
         self,
         params,
         cfg: ArchConfig,
-        sc: ServeConfig = ServeConfig(),
+        sc: Optional[ServeConfig] = None,
         *,
         ac: zoo.ApplyCfg = zoo.ApplyCfg(),
         ctx: Optional[ShardCtx] = None,
     ):
+        # sc defaults to None, NOT ServeConfig(): a dataclass default
+        # would be one shared mutable instance across every engine.
+        # (ApplyCfg is frozen, so its shared default is harmless.)
+        sc = ServeConfig() if sc is None else sc
         self.params, self.cfg, self.sc, self.ac, self.ctx = (
             params, cfg, sc, ac, ctx
         )

@@ -341,3 +341,178 @@ def test_rwkv6_state_chaining():
     np.testing.assert_allclose(
         np.asarray(s2), np.asarray(s_full), atol=2e-4, rtol=1e-3
     )
+
+
+# ---------------------------------------------------------------------------
+# grouped_mlp (sorted ragged dispatch kernel)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.grouped_mlp import (  # noqa: E402
+    block_tables,
+    grouped_mlp_pallas,
+    grouped_mlp_pallas_vjp,
+    ragged_buffer_rows,
+    ragged_row_offsets,
+)
+
+GROUPED_CASES = [
+    # G, E, d, f, bm, gated, act, per-(group, expert) valid row counts —
+    # includes empty experts, whole empty groups, non-block-multiples.
+    (2, 4, 16, 24, 8, True, "silu", [[9, 0, 3, 8], [0, 0, 0, 20]]),
+    (1, 3, 20, 12, 4, False, "gelu", [[5, 1, 2]]),
+    (2, 2, 8, 8, 8, True, "sqrelu", [[0, 0], [16, 16]]),
+    (1, 5, 12, 16, 16, True, "gelu", [[1, 17, 0, 16, 2]]),
+]
+
+
+def _ragged_inputs(G, E, d, f, bm, gated, counts, key=KEY):
+    """Random rows in the valid ragged slots, zeros in pad/tail rows."""
+    counts = jnp.asarray(counts, jnp.int32)
+    M = ragged_buffer_rows(int(counts.sum(-1).max()), E, bm)
+    row_off, _ = ragged_row_offsets(counts, bm)
+    ks = jax.random.split(key, 4)
+    xs = np.zeros((G, M, d), np.float32)
+    rnd = np.asarray(jax.random.normal(ks[0], (G, M, d)))
+    for g in range(G):
+        for e in range(E):
+            s, c = int(row_off[g, e]), int(counts[g, e])
+            xs[g, s:s + c] = rnd[g, s:s + c]
+    wi = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.1 if gated else None
+    wo = jax.random.normal(ks[3], (E, f, d)) * 0.1
+    return jnp.asarray(xs), wi, wg, wo, counts
+
+
+@pytest.mark.parametrize("case", GROUPED_CASES)
+def test_grouped_mlp_pallas_vs_ref(case):
+    G, E, d, f, bm, gated, act, counts = case
+    xs, wi, wg, wo, counts = _ragged_inputs(G, E, d, f, bm, gated, counts)
+    got = grouped_mlp_pallas(
+        xs, wi, wg, wo, counts, act=act, bm=bm, bf=8, bd=8, interpret=True
+    )
+    want = ref.grouped_mlp_ref(xs, wi, wg, wo, counts, block=bm, act=act)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("case", GROUPED_CASES)
+def test_grouped_mlp_pallas_grad_vs_ref(case):
+    """jax.grad through the grouped-GEMM custom VJP (scalar-prefetch dx +
+    segment-walk dW kernels, interpret mode) matches the oracle's
+    autodiff for every differentiable input."""
+    G, E, d, f, bm, gated, act, counts = case
+    xs, wi, wg, wo, counts = _ragged_inputs(G, E, d, f, bm, gated, counts)
+    # Cotangent is zero on dead-block rows: the kernel skips them (dx = 0
+    # by contract), while the oracle's autodiff would produce
+    # act'(0)-shaped gradients for those all-zero rows. The combine step
+    # never reads them, so this is the only cotangent that can reach the
+    # kernel from moe_apply.
+    nb = xs.shape[1] // bm
+    _, bl = block_tables(counts, bm, nb)
+    live_rows = jnp.repeat(bl, bm, axis=1)[..., None]  # (G, M, 1)
+    cot = jax.random.normal(jax.random.fold_in(KEY, 1), xs.shape)
+    cot = cot * live_rows
+
+    def loss_pallas(xs, wi, wg, wo):
+        y = grouped_mlp_pallas_vjp(
+            xs, wi, wg, wo, counts, act=act, bm=bm, bf=8, bd=8,
+            interpret=True,
+        )
+        return jnp.sum(y * cot)
+
+    def loss_ref(xs, wi, wg, wo):
+        y = ref.grouped_mlp_ref(xs, wi, wg, wo, counts, block=bm, act=act)
+        return jnp.sum(y * cot)
+
+    argnums = (0, 1, 2, 3) if gated else (0, 1, 3)
+    got = jax.jit(jax.grad(loss_pallas, argnums))(xs, wi, wg, wo)
+    want = jax.grad(loss_ref, argnums)(xs, wi, wg, wo)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_grouped_mlp_ops_dispatch():
+    """xla (ragged_dot), pallas (interpret) and ref agree through the
+    ops entry point."""
+    case = GROUPED_CASES[0]
+    G, E, d, f, bm, gated, act, counts = case
+    xs, wi, wg, wo, counts = _ragged_inputs(G, E, d, f, bm, gated, counts)
+    ys = {
+        impl: ops.grouped_mlp(
+            xs, wi, wg, wo, counts, act=act, block=bm, implementation=impl
+        )
+        for impl in ("xla", "pallas", "ref")
+    }
+    for impl in ("xla", "pallas"):
+        np.testing.assert_allclose(
+            np.asarray(ys[impl]), np.asarray(ys["ref"]),
+            atol=1e-5, rtol=1e-5,
+        )
+
+
+def test_grouped_mlp_block_tables():
+    """block_expert walks segments in order (tail clamps to E-1);
+    block_live marks exactly the blocks holding valid rows; every expert
+    owns >= 1 block (the min-one-block layout contract the dW kernel's
+    segment flush relies on)."""
+    counts = jnp.asarray([[9, 0, 3, 8]], jnp.int32)  # bm=8
+    nb = ragged_buffer_rows(20, 4, 8) // 8  # ceil(20/8) + 4 = 7 blocks
+    be, bl = block_tables(counts, 8, nb)
+    # segments: e0 -> 2 blocks (9 rows), e1 -> 1 (empty), e2 -> 1, e3 -> 1,
+    # tail 2 blocks clamp to e3.
+    assert be[0].tolist() == [0, 0, 1, 2, 3, 3, 3]
+    assert bl[0].tolist() == [1, 1, 0, 1, 1, 0, 0]
+
+
+def test_grouped_mlp_rows_independent_of_capacity_factor():
+    """The ragged buffer's static row count depends on the assignment
+    count (g*k), NOT on capacity factor — the padded buffer's E*cap rows
+    scale linearly with it."""
+    g, E, k, bm = 4096, 8, 2, 128
+    M = ragged_buffer_rows(g * k, E, bm)
+    from repro.core.routing import capacity
+    from repro.configs import MoECfg
+
+    for cf in (1.0, 1.25, 2.0):
+        moe = MoECfg(num_experts=E, capacity_factor=cf, top_k=k)
+        assert ragged_buffer_rows(g * k, E, bm) == M
+        assert capacity(g, moe) * E == int(cf * g)  # padded rows grow
+
+
+# ---------------------------------------------------------------------------
+# tile auto-tuning (VMEM budget model)
+# ---------------------------------------------------------------------------
+
+
+def test_tune_expert_tiles_vmem_budget():
+    """Defaults hold for small d_model; the dW accumulator term drives
+    bf down to 128 from d_model >= 4096 (the kernels/README case)."""
+    from repro.kernels.tiling import (
+        VMEM_BUDGET_BYTES,
+        expert_tile_vmem_bytes,
+        tune_expert_tiles,
+    )
+
+    assert tune_expert_tiles(4096, 2048, 512) == (128, 256, 512)
+    assert tune_expert_tiles(4096, 5632, 2048) == (128, 256, 512)
+    bc, bf, bd = tune_expert_tiles(4096, 16384, 4096)
+    assert bf == 128
+    assert expert_tile_vmem_bytes(bc, bf, bd, 4096) <= VMEM_BUDGET_BYTES
+    # tuned tiles stay MXU-aligned
+    assert bc % 128 == bf % 128 == bd % 128 == 0
+
+
+def test_tune_attention_tiles_vmem_budget():
+    from repro.kernels.tiling import (
+        VMEM_BUDGET_BYTES,
+        attention_tile_vmem_bytes,
+        tune_attention_tiles,
+    )
+
+    assert tune_attention_tiles(4096, 4096, 128) == (512, 512)
+    bq, bk = tune_attention_tiles(4096, 4096, 2048)  # absurd dh: must fit
+    assert attention_tile_vmem_bytes(bq, bk, 2048) <= VMEM_BUDGET_BYTES
+    assert bq % 128 == bk % 128 == 0

@@ -90,3 +90,20 @@ def test_enc_dec_serve():
         vals, dec[:, :1], cache, jnp.asarray(Sd, jnp.int32), cfg
     )
     assert bool(jnp.isfinite(lg2).all())
+
+
+def test_engines_do_not_share_default_config():
+    """Regression: ``sc`` used to default to a single shared ServeConfig
+    instance (mutable dataclass default) — mutating one engine's config
+    leaked into every other engine."""
+    cfg = get_reduced("tinyllama-1.1b")
+    p = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    vals, _ = pm.split(p)
+    e1 = ServeEngine(vals, cfg)
+    e2 = ServeEngine(vals, cfg)
+    assert e1.sc is not e2.sc
+    e1.sc.temperature = 0.7
+    assert e2.sc.temperature == 0.0
+    # explicit configs still pass through untouched
+    sc = ServeConfig(max_batch=3)
+    assert ServeEngine(vals, cfg, sc).sc is sc
