@@ -84,54 +84,68 @@ def kernel_rooflines() -> list[tuple[str, float, str]]:
     # the upcycled-MoE imbalance regime the capacity factor exists to
     # absorb). Padded FLOPs/bytes follow E*cap = cf*g rows; ragged live
     # FLOPs follow the FILLED (block-aligned) rows only — independent of
-    # cf once every expert saturates — while ragged bytes follow the
-    # static buffer M (dead blocks are skipped for compute but still
-    # streamed; see kernels/grouped_mlp.py).
+    # cf once every expert saturates. With the COMPACTED block walk
+    # (kernels/grouped_mlp.py prev_live pinning) dead blocks stream no
+    # x/weight tiles either, so bytes are ragged like FLOPs:
+    # bytes_ratio = ragged_compacted / padded, < 1.0 means the ragged
+    # path reads strictly fewer HBM bytes than the capacity buffer.
+    from repro.kernels.tiling import grouped_walk_fwd_bytes
+
     g_tok, k, bm = 4096, 2, 128
     fracs = [0.30, 0.20, 0.15, 0.10, 0.08, 0.07, 0.06, 0.04]  # E = 8
     M = (-(-g_tok * k // bm) + E) * bm
-    rag_w_bytes = (M // bm) * 3 * d * f * 2
-    rag_x_bytes = M * d * 2
-    rag_bytes_fwd = rag_w_bytes + 2 * rag_x_bytes
-    for cf in (1.0, 1.25, 2.0):
+    nb_total = M // bm
+
+    def live_blocks_of(cf):
         cap_cf = -(-int(g_tok * cf) // E)
         counts = [min(int(fr * k * g_tok), cap_cf) for fr in fracs]
-        live = sum(max(1, -(-c // bm)) * bm for c in counts)
+        return cap_cf, counts, sum(-(-c // bm) for c in counts)
+
+    for cf in (1.0, 1.25, 2.0):
+        cap_cf, counts, nb_live = live_blocks_of(cf)
+        live = nb_live * bm
         pad_rows = E * cap_cf
         pad_flops = 6 * pad_rows * d * f
         rag_flops = 6 * live * d * f
         pad_bytes = -(-cap_cf // bc) * E * 3 * d * f * 2 \
             + 2 * pad_rows * d * 2
+        rag_bytes = grouped_walk_fwd_bytes(
+            nb_live, nb_total, bm, d, f, 3, compacted=True
+        )
+        rag_bytes_static = grouped_walk_fwd_bytes(
+            nb_live, nb_total, bm, d, f, 3, compacted=False
+        )
         rows.append((
             f"roofline/kernel.grouped_mlp.cf{cf}",
             0.0,
             f"padded_rows={pad_rows} ragged_live_rows={live} "
             f"flops_ratio_padded_over_ragged={pad_flops / rag_flops:.2f} "
-            f"bytes_ratio={pad_bytes / rag_bytes_fwd:.2f} "
+            f"bytes_ratio={rag_bytes / pad_bytes:.2f} "
+            f"bytes_ratio_static_walk={rag_bytes_static / pad_bytes:.2f} "
             f"ragged_static_rows={M} (cf-independent)",
         ))
     # fwd/bwd rooflines for the grouped kernel at the cf=2.0 point: same
     # per-row FLOP family as expert_ffn (6x fwd, 16x bwd recompute tax),
-    # bytes follow the static buffer + per-block weight streaming.
-    cap2 = -(-int(g_tok * 2.0) // E)
-    live2 = sum(
-        max(1, -(-min(int(fr * k * g_tok), cap2) // bm)) * bm
-        for fr in fracs
-    )
+    # bytes follow the compacted walk (live blocks only stream tiles).
+    _, _, nb_live2 = live_blocks_of(2.0)
+    live2 = nb_live2 * bm
+    rag_w_bytes = nb_live2 * 3 * d * f * 2
+    rag_x_bytes = nb_live2 * bm * d * 2
     rows.append(_roofline_row(
         "roofline/kernel.grouped_mlp.fwd", 6 * live2 * d * f,
-        rag_bytes_fwd,
+        grouped_walk_fwd_bytes(nb_live2, nb_total, bm, d, f, 3,
+                               compacted=True),
     ))
     nf = f // bf
     rows.append(_roofline_row(
         # Same convention as kernel.expert_ffn.bwd: the dx kernel
         # re-streams full-d x/dy rows once per f tile in each of its two
         # phases, the dW kernel once more (3*nf*2 x-passes total); weight
-        # tiles stream per row-block twice in dx, once in dW
-        # (3*rag_w_bytes); writes = dx (x-sized) + dW (weight-sized).
+        # tiles stream per LIVE row-block twice in dx, once in dW
+        # (3*rag_w_bytes); writes = dx (buffer-sized) + dW (weight-sized).
         "roofline/kernel.grouped_mlp.bwd", 16 * live2 * d * f,
         3 * rag_w_bytes + 3 * nf * 2 * rag_x_bytes
-        + rag_x_bytes + E * 3 * d * f * 2,
+        + M * d * 2 + E * 3 * d * f * 2,
     ))
     B, H, Sq, dh = 8, 16, 4096, 128
     bq = 512  # flash_attention.py default
@@ -150,6 +164,47 @@ def kernel_rooflines() -> list[tuple[str, float, str]]:
         "roofline/kernel.flash_attention.bwd", att_bwd,
         2 * nq * 2 * row_bytes + 7 * row_bytes,
     ))
+    return rows
+
+
+def moe_comm_rows() -> list[tuple[str, float, str]]:
+    """Comm-volume model for the two sorted-dispatch layouts
+    (core/moe.py dispatch table), per device per MoE layer, bf16:
+
+    * expert-parallel a2a (``moe.ep="a2a"``): tokens move — 2 exchanges
+      (dispatch + return) of ``tokens_dev * k`` rows of d features, of
+      which fraction (ep-1)/ep crosses links;
+    * FSDP weight-gather (``ep="none"``): weights move — each device
+      gathers the (1 - 1/ep) of the 3*E*d*f expert weights it does not
+      hold on the same axis.
+
+    The (ep-1)/ep crossing fractions cancel, so the crossover is
+    ``tokens_dev* = 3 * E * f / (2 * k)`` — independent of d and ep:
+    below it tokens are cheaper to move (a2a wins), above it weights
+    are. Reported per (E, ep, tokens_dev) config with the a2a's ICI
+    time as the value column.
+    """
+    from repro.launch.mesh import ICI_BW
+
+    d, f, k = 2048, 5632, 2  # reference 1B-class MoE layer, top-2
+    rows = []
+    for E, ep, tokens_dev in [
+        (8, 8, 4096),
+        (8, 8, 65536),
+        (64, 16, 8192),
+        (64, 16, 1 << 19),
+    ]:
+        frac = (ep - 1) / ep
+        a2a = 2 * tokens_dev * k * d * 2 * frac
+        gather = 3 * E * d * f * 2 * frac
+        crossover = 3 * E * f // (2 * k)
+        winner = "a2a" if a2a < gather else "weight_gather"
+        rows.append((
+            f"roofline/comm.moe.E{E}.ep{ep}.tok{tokens_dev}",
+            a2a / ICI_BW * 1e6,
+            f"a2a_bytes={a2a:.3e} weight_gather_bytes={gather:.3e} "
+            f"crossover_tokens_dev={crossover} winner={winner}",
+        ))
     return rows
 
 
@@ -191,4 +246,5 @@ def run() -> list[tuple[str, float, str]]:
             "repro.launch.dryrun --all",
         ))
     rows.extend(kernel_rooflines())
+    rows.extend(moe_comm_rows())
     return rows

@@ -24,11 +24,23 @@ fi
 echo "[verify] tier-1: python -m pytest -x -q ${PYTEST_ARGS[*]:-} $*"
 python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
+echo "[verify] dispatch parity on a forced 8-device CPU mesh"
+# The expert-parallel sorted dispatch (moe.ep="a2a", shard_map ragged
+# all-to-all) needs real multiple devices to exercise its collectives:
+# force 8 CPU devices and run the parity suite (sorted-EP vs
+# single-device sorted vs gather, outputs + grads, all routers, empty
+# local experts). The module self-skips in the 1-device tier-1 run.
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  python -m pytest -x -q tests/test_ep_dispatch.py
+
 echo "[verify] kernel micro-bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
-# Pallas custom-VJP kernels in interpret mode and the grouped-GEMM
-# sorted-dispatch path at capacity factors 1.0/1.25/2.0); roofline keeps
-# the static per-kernel FLOP/byte models importable and consistent.
+# Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
+# sorted-dispatch path at capacity factors 1.0/1.25/2.0, and the
+# compacted block walk's dead-block byte-savings row); roofline keeps
+# the static per-kernel FLOP/byte models — now including the
+# ragged-bytes ratios and the EP-a2a vs weight-gather comm crossover —
+# importable and consistent.
 REPRO_BENCH_SMOKE=1 PYTHONPATH="$PYTHONPATH:." \
   python -m benchmarks.run --only kernels_micro,roofline
 

@@ -33,13 +33,35 @@ Sharding: the padded paths constrain dispatched buffers (G, E, cap, d) to
 GSPMD insert the all-to-alls of the paper's "expert partitioning"
 (§A.4). When E doesn't divide the axis (grok), the constraint degrades to
 replicated-expert + tensor-parallel d_ff via the rules engine. The sorted
-path keeps the ragged token buffer batch-sharded (``batch seq embed`` —
-expert segment boundaries are dynamic, so the expert dim cannot be a
-sharding axis) and constrains the expert weights exactly like the padded
-paths: expert-resident when E divides ``model`` (GSPMD then gathers
-weights to the data shards — the expert-data/FSDP layout of the
-Llama-3-meets-MoE upcycling stack), else d_ff tensor-parallel. Full
-expert-parallel all-to-all stays the gather path's regime.
+path has two layouts, selected by ``moe.ep``:
+
+  ==========  ===========  ================  ==========================
+  layout      who moves    drops happen      sharding constraints
+  ==========  ===========  ================  ==========================
+  ep="none"   weights      router capacity   ragged buffer batch-
+  (FSDP       (E weight    only (keep        sharded (``batch seq
+  weight-     gathers to   masks, shared     embed``; dynamic expert
+  gather)     the data     by all paths)     boundaries forbid an
+              shards)                        expert axis); weights
+                                             expert-resident when E
+                                             divides ``model``, else
+                                             d_ff tensor-parallel
+  ep="a2a"    tokens (2    capacity PLUS     shard_map: token groups
+  (expert-    ragged a2a   send-buffer       over every mesh axis,
+  parallel,   exchanges    overflow past     weights over ``model``
+  core/ep.py) over the     the static per-   (E/ep local experts per
+              ``model``    peer row budget,  device); send/recv a2a
+              axis)        ``ep_overflow_    buffers block-aligned,
+                           frac`` metric     static (ep, budget, d)
+  ==========  ===========  ================  ==========================
+
+``ep="none"`` is the "Llama 3 Meets MoE" upcycling layout — weight
+traffic scales with E; ``ep="a2a"`` trades it for token traffic that
+scales with tokens/device (the GShard regime, where the capacity buffer
+used to live) — see benchmarks/roofline.py ``comm.moe`` for the
+crossover. Falls back to ``ep="none"`` when the mesh cannot host EP
+(no ``model`` axis, size 1, or E % ep != 0 — the rules-engine
+fallback discipline).
 """
 from __future__ import annotations
 
@@ -123,61 +145,28 @@ def _sorted_dispatch(params, xg, r, cfg: ArchConfig, moe: MoECfg, *,
     dispatch paths).
     """
     from repro.kernels import ops
-    from repro.kernels.grouped_mlp import (
-        ragged_buffer_rows,
-        ragged_row_offsets,
-    )
+    from repro.kernels.grouped_mlp import ragged_destinations
 
     G, g, d = xg.shape
     E = moe.num_experts
 
-    # Flat per-group assignment stream (token id, expert id, weight).
-    # Token-choice routers expose it token-major (G, g, k); Expert Choice
-    # slots are already expert-major and fully dense, so its slot table
-    # flattens directly.
-    if r.token_expert is not None:
-        A = r.token_expert.shape[-1]
-        tok = jnp.broadcast_to(
-            jnp.arange(g, dtype=jnp.int32)[None, :, None], (G, g, A)
-        ).reshape(G, g * A)
-        eid = r.token_expert.reshape(G, g * A)
-        w = r.token_weight.reshape(G, g * A)
-    else:
-        cap = r.token_idx.shape[-1]
-        eid = jnp.broadcast_to(
-            jnp.arange(E, dtype=jnp.int32)[:, None], (E, cap)
-        ).reshape(1, E * cap)
-        eid = jnp.broadcast_to(eid, (G, E * cap))
-        tok = r.token_idx.reshape(G, E * cap)
-        w = r.combine.reshape(G, E * cap)
-
+    # Flat per-group assignment stream (token id, expert id, weight) —
+    # shared with the expert-parallel path (core/ep.py).
+    tok, eid, w = R.assignment_stream(r, E, g)
     N = tok.shape[1]
     valid = (eid < E) & (tok < g)
     key = jnp.where(valid, eid, E).astype(jnp.int32)
 
     # Stable sort by expert (dropped assignments -> key E, past the last
-    # segment). Only the integer permutation goes through lax.sort; the
-    # differentiable weights follow via take_along_axis, so no gradient
-    # flows through the sort itself.
-    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (G, N))
-    _, perm = jax.lax.sort((key, iota), dimension=1, num_keys=1)
-    key_s = jnp.take_along_axis(key, perm, axis=1)
+    # segment) and block-aligned ragged destinations — the layout math
+    # shared with core/ep.py via kernels/grouped_mlp.py. Only the
+    # integer permutation goes through lax.sort; the differentiable
+    # weights follow via take_along_axis, so no gradient flows through
+    # the sort itself.
+    perm, key_s, counts, dest, M = ragged_destinations(key, E, block)
     tok_s = jnp.take_along_axis(tok, perm, axis=1)
     w_s = jnp.take_along_axis(w, perm, axis=1)
     valid_s = key_s < E
-
-    # Group-local per-expert segment offsets (bincount/cumsum) and the
-    # block-aligned ragged destination of every surviving assignment.
-    counts = (key_s[..., None] == jnp.arange(E)).sum(1).astype(jnp.int32)
-    M = ragged_buffer_rows(N, E, block)
-    row_off, valid_off = ragged_row_offsets(counts, block)  # (G, E+1)
-    rank = (
-        jnp.arange(N, dtype=jnp.int32)[None]
-        - jnp.take_along_axis(valid_off, key_s, axis=1)
-    )
-    dest = jnp.where(
-        valid_s, jnp.take_along_axis(row_off, key_s, axis=1) + rank, M
-    )
 
     # Ragged buffers: src maps ragged row -> group-local token (g = pad
     # row), wr carries the combine weight (0 on pad rows). Row M is the
@@ -241,6 +230,7 @@ def moe_apply(
     smaller blocks to keep interpret-mode buffers tiny).
     """
     router_kind = router_kind or moe.router
+    ep_overflow = jnp.zeros((), jnp.float32)
     orig_shape = x.shape
     x2d = x.reshape(-1, x.shape[-1])
     xg, n, pad = _group(x2d, moe.group_size)
@@ -289,10 +279,28 @@ def moe_apply(
         y = act(ctx, y, "batch seq mlp")
         y = y[:, :g]
     elif dispatch == "sorted":
-        y = _sorted_dispatch(
-            params, xg, r, cfg, moe,
-            ctx=ctx, implementation=implementation, block=sorted_block,
+        from repro.sharding.logical import expert_parallel_layout
+
+        ep_layout = (
+            expert_parallel_layout(ctx.mesh, moe.num_experts)
+            if (moe.ep == "a2a" and ctx is not None) else None
         )
+        if ep_layout is not None:
+            from repro.core.ep import sorted_dispatch_ep
+
+            y, ep_overflow = sorted_dispatch_ep(
+                params, xg, r, cfg, moe,
+                ctx=ctx, implementation=implementation,
+                block=sorted_block,
+            )
+        else:
+            # ep="a2a" on an EP-incapable mesh (or no ctx) falls back to
+            # the batch-sharded weight-gather layout — same results.
+            y = _sorted_dispatch(
+                params, xg, r, cfg, moe,
+                ctx=ctx, implementation=implementation,
+                block=sorted_block,
+            )
     else:
         raise ValueError(f"unknown dispatch {dispatch!r}")
 
@@ -312,5 +320,8 @@ def moe_apply(
         "z_loss": r.z_loss * moe.z_loss_weight,
         "dropped_frac": r.dropped_frac,
         "router_prob_mean_max": r.probs.max(-1).mean(),
+        # Assignments dropped by the expert-parallel a2a send-buffer
+        # budget (0 outside the EP path and whenever the budget holds).
+        "ep_overflow_frac": ep_overflow,
     }
     return y, metrics

@@ -201,6 +201,40 @@ def route(logits: jax.Array, moe: MoECfg, router_kind: str) -> Routing:
     raise ValueError(f"unknown router {router_kind!r}")
 
 
+def assignment_stream(r: Routing, num_experts: int, group: int):
+    """Flat per-group assignment stream ``(tok, eid, w)``, each ``(G, N)``:
+    group-local token id, expert id and combine weight for every routing
+    assignment. This is the common input of the sorted dispatches
+    (single-device ragged sort in core/moe.py and the expert-parallel
+    all-to-all in core/ep.py).
+
+    Token-choice routers expose it token-major (their ``token_expert`` /
+    ``token_weight`` views, N = g*k); Expert Choice slots are already
+    expert-major and fully dense, so its slot table flattens directly
+    (N = E*cap). Dropped/invalid assignments carry ``eid == E`` or
+    ``tok == group``.
+    """
+    G = r.probs.shape[0]
+    E = num_experts
+    if r.token_expert is not None:
+        A = r.token_expert.shape[-1]
+        tok = jnp.broadcast_to(
+            jnp.arange(group, dtype=jnp.int32)[None, :, None],
+            (G, group, A),
+        ).reshape(G, group * A)
+        eid = r.token_expert.reshape(G, group * A)
+        w = r.token_weight.reshape(G, group * A)
+    else:
+        cap = r.token_idx.shape[-1]
+        eid = jnp.broadcast_to(
+            jnp.arange(E, dtype=jnp.int32)[:, None], (E, cap)
+        ).reshape(1, E * cap)
+        eid = jnp.broadcast_to(eid, (G, E * cap))
+        tok = r.token_idx.reshape(G, E * cap)
+        w = r.combine.reshape(G, E * cap)
+    return tok, eid, w
+
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------

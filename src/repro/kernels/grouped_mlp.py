@@ -18,14 +18,29 @@ the layout contract (shared with core/moe.py via ``ragged_row_offsets``):
   assignment count (g * k for token-choice routing) — *independent of
   capacity factor*, unlike ``E * cap``.
 
-The kernels walk expert boundaries with **scalar prefetch**: two small
+The kernels walk expert boundaries with **scalar prefetch**: three small
 int32 tables, ``block_expert (G, nb)`` (which expert owns row-block m;
-tail blocks clamp to E-1) and ``block_live (G, nb)`` (does the block hold
-any valid row), are prefetched into SMEM and drive the weight BlockSpec
-index maps — so row-block m fetches exactly its owner's weight tiles, and
-consecutive blocks of the same expert reuse the resident tiles. Dead
-blocks skip all matmuls via scalar ``pl.when`` (their output/grad rows
-are written as zeros), making compute proportional to the *filled* rows.
+tail blocks clamp to E-1), ``block_live (G, nb)`` (does the block hold
+any valid row) and ``prev_live (G, nb)`` (the most recent live block at
+or before m; 0 when none), are prefetched into SMEM and drive the
+x/weight BlockSpec index maps — so row-block m fetches exactly its
+owner's weight tiles, and consecutive blocks of the same expert reuse
+the resident tiles. Dead blocks skip all matmuls via scalar ``pl.when``
+(their output/grad rows are written as zeros), making compute
+proportional to the *filled* rows.
+
+**Compacted block walk (bytes ragged like FLOPs):** a dead block's grid
+steps pin every *input* index map to the previous live block's final
+resident window (via the ``prev_live`` table), so the pipeline's
+same-window revisit check suppresses the fetch entirely — dead blocks
+stream no x or weight tiles, only their zero output write. A leading
+dead run (block 0 dead) falls back to block 0's own tiles, one fetch.
+The static grid shape is unchanged; only the data walk is compacted, so
+HBM read bytes now track the *live* blocks exactly like the FLOPs do
+(see ``kernels.tiling.grouped_walk_fwd_bytes`` for the byte model and
+``benchmarks/roofline.py kernel.grouped_mlp.cf*`` for the ratios vs the
+padded path).
+
 Contract note: dead-block rows get ``dx = 0`` — valid because the combine
 step never reads their outputs, so their cotangent is identically zero
 (the ref oracle's autodiff, fed a nonzero cotangent there, would instead
@@ -102,6 +117,37 @@ def ragged_row_offsets(group_sizes: jax.Array, bm: int):
     return row_off, valid_off
 
 
+def ragged_destinations(key: jax.Array, num_experts: int, block: int):
+    """Shared sort-and-pack step of the sorted dispatches (single-device
+    core/moe.py and the per-device leg of core/ep.py): stable-sort each
+    row of ``key (G, N)`` — expert id per assignment, ``num_experts``
+    marking invalid — and compute every assignment's destination row in
+    the block-aligned ragged buffer.
+
+    Returns ``(perm, key_s, counts, dest, M)``: the sort permutation,
+    sorted keys, per-expert valid counts ``(G, E)``, destination rows in
+    sorted order (``M`` = trash row for invalid assignments), and the
+    static buffer row count. Keeping this next to ``ragged_buffer_rows``
+    / ``ragged_row_offsets`` keeps the layout contract in one place.
+    """
+    G, N = key.shape
+    iota = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (G, N))
+    key_s, perm = jax.lax.sort((key, iota), dimension=1, num_keys=1)
+    counts = (
+        (key_s[..., None] == jnp.arange(num_experts)).sum(1)
+        .astype(jnp.int32)
+    )
+    M = ragged_buffer_rows(N, num_experts, block)
+    row_off, valid_off = ragged_row_offsets(counts, block)  # (G, E+1)
+    rank = iota - jnp.take_along_axis(valid_off, key_s, axis=1)
+    dest = jnp.where(
+        key_s < num_experts,
+        jnp.take_along_axis(row_off, key_s, axis=1) + rank,
+        M,
+    )
+    return perm, key_s, counts, dest, M
+
+
 def block_tables(group_sizes: jax.Array, bm: int, nb: int):
     """Scalar-prefetch tables for the kernels' expert-boundary walk.
 
@@ -121,6 +167,18 @@ def block_tables(group_sizes: jax.Array, bm: int, nb: int):
     rel = b[None, :] - jnp.take_along_axis(bstart, be, axis=1)
     bl = rel < jnp.take_along_axis(live_blocks, be, axis=1)
     return be, bl.astype(jnp.int32)
+
+
+def prev_live_table(block_live: jax.Array) -> jax.Array:
+    """(G, nb) int32: index of the most recent LIVE row-block at or
+    before m (0 when no live block precedes m). Dead grid steps pin
+    their input index maps to this block's resident tiles, which the
+    pipeline's same-window revisit check turns into a no-fetch — the
+    compacted block walk."""
+    nb = block_live.shape[-1]
+    idx = jnp.arange(nb, dtype=jnp.int32)[None]
+    marked = jnp.where(block_live > 0, idx, -1)
+    return jnp.maximum(jax.lax.cummax(marked, axis=1), 0).astype(jnp.int32)
 
 
 def _resolve_tiles(bf, bd, f, d):
@@ -226,6 +284,34 @@ def grouped_mlp_pallas(
     )
 
 
+def _compact_walk_maps(nf: int, nd: int):
+    """Input index-map factories for the compacted block walk: a live
+    block m walks its tiles normally; a dead block pins every input
+    window to the previous live block's FINAL window (x tile at
+    di=nd-1, wi/wg at (nd-1, nf-1), wo at (nf-1, 0)) so the pipeline's
+    same-window revisit check skips the fetch for the whole dead run."""
+
+    def pick(live, m, pf_m):
+        return jnp.where(live, m, pf_m)
+
+    def x_map(g, m, di, be, bl, pf):
+        live = bl[g, m] > 0
+        return (g, pick(live, m, pf[g, m]), jnp.where(live, di, nd - 1))
+
+    def wi_map(g, m, di, fi, be, bl, pf):
+        live = bl[g, m] > 0
+        mm = pick(live, m, pf[g, m])
+        return (be[g, mm], jnp.where(live, di, nd - 1),
+                jnp.where(live, fi, nf - 1))
+
+    def wo_map(g, m, fi, be, bl, pf):
+        live = bl[g, m] > 0
+        mm = pick(live, m, pf[g, m])
+        return (be[g, mm], jnp.where(live, fi, nf - 1), 0)
+
+    return x_map, wi_map, wo_map
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("act", "bm", "bf", "bd", "interpret"),
@@ -242,18 +328,29 @@ def _grouped_mlp_pallas_tables(
     fp, dp = f + pf, d + pd
     nb, nf, nd = M // bm, fp // bf, dp // bd
     gated = wg is not None
+    pl_tbl = prev_live_table(bl)
+    x_map, wi_map, wo_map = _compact_walk_maps(nf, nd)
 
     in_specs = [
-        pl.BlockSpec((1, bm, bd), lambda g, m, fi, di, be, bl: (g, m, di)),
         pl.BlockSpec(
-            (1, bd, bf), lambda g, m, fi, di, be, bl: (be[g, m], di, fi)
+            (1, bm, bd),
+            lambda g, m, fi, di, be, bl, pt: x_map(g, m, di, be, bl, pt),
+        ),
+        pl.BlockSpec(
+            (1, bd, bf),
+            lambda g, m, fi, di, be, bl, pt: wi_map(
+                g, m, di, fi, be, bl, pt
+            ),
         ),
     ]
     args = [xs, wi]
     if gated:
         in_specs.append(
             pl.BlockSpec(
-                (1, bd, bf), lambda g, m, fi, di, be, bl: (be[g, m], di, fi)
+                (1, bd, bf),
+                lambda g, m, fi, di, be, bl, pt: wi_map(
+                    g, m, di, fi, be, bl, pt
+                ),
             )
         )
         args.append(wg)
@@ -262,7 +359,8 @@ def _grouped_mlp_pallas_tables(
     # (bm, bf) tile, accumulated over f.
     in_specs.append(
         pl.BlockSpec(
-            (1, bf, dp), lambda g, m, fi, di, be, bl: (be[g, m], fi, 0)
+            (1, bf, dp),
+            lambda g, m, fi, di, be, bl, pt: wo_map(g, m, fi, be, bl, pt),
         )
     )
     args.append(wo)
@@ -271,7 +369,7 @@ def _grouped_mlp_pallas_tables(
     if gated:
         scratch.append(pltpu.VMEM((bm, bf), jnp.float32))
 
-    def kernel(be_ref, bl_ref, *refs):
+    def kernel(be_ref, bl_ref, pt_ref, *refs):
         if gated:
             x_ref, wi_ref, wg_ref, wo_ref, o_ref, h_acc, g_acc = refs
         else:
@@ -281,11 +379,11 @@ def _grouped_mlp_pallas_tables(
                     h_acc, g_acc, act=act, nd=nd)
 
     gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(G, nb, nf, nd),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, bm, dp), lambda g, m, fi, di, be, bl: (g, m, 0)
+            (1, bm, dp), lambda g, m, fi, di, be, bl, pt: (g, m, 0)
         ),
         scratch_shapes=scratch,
     )
@@ -294,7 +392,7 @@ def _grouped_mlp_pallas_tables(
         grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((G, M, dp), xs.dtype),
         interpret=interpret,
-    )(be, bl, *args)
+    )(be, bl, pl_tbl, *args)
     if pd:
         out = out[:, :, :d]
     return out
@@ -442,16 +540,32 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
     fp, dp = f + pf, d + pd
     nb, nf, nd = M // bm, fp // bf, dp // bd
     gated = wg is not None
+    pl_tbl = prev_live_table(bl)
+    x_map, wi_map, _ = _compact_walk_maps(nf, nd)
 
     # ---- dx: grid (G, nb, nf, 2*nd), two-phase over the last axis ------
+    # Same compacted walk as the forward: dead blocks pin every input
+    # window to the previous live block's final window (no fetch).
     di_of = lambda t, nd=nd: jax.lax.rem(t, nd)
+
+    def dx_wo_map(g, m, fi, t, be, bl, pt):
+        live = bl[g, m] > 0
+        mm = jnp.where(live, m, pt[g, m])
+        return (be[g, mm], jnp.where(live, fi, nf - 1),
+                jnp.where(live, di_of(t), nd - 1))
+
     in_specs = [
         pl.BlockSpec(
-            (1, bm, bd), lambda g, m, fi, t, be, bl: (g, m, di_of(t))
+            (1, bm, bd),
+            lambda g, m, fi, t, be, bl, pt: x_map(
+                g, m, di_of(t), be, bl, pt
+            ),
         ),
         pl.BlockSpec(
             (1, bd, bf),
-            lambda g, m, fi, t, be, bl: (be[g, m], di_of(t), fi),
+            lambda g, m, fi, t, be, bl, pt: wi_map(
+                g, m, di_of(t), fi, be, bl, pt
+            ),
         ),
     ]
     args = [xs, wi]
@@ -459,20 +573,20 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
         in_specs.append(
             pl.BlockSpec(
                 (1, bd, bf),
-                lambda g, m, fi, t, be, bl: (be[g, m], di_of(t), fi),
+                lambda g, m, fi, t, be, bl, pt: wi_map(
+                    g, m, di_of(t), fi, be, bl, pt
+                ),
             )
         )
         args.append(wg)
-    in_specs.append(
-        pl.BlockSpec(
-            (1, bf, bd),
-            lambda g, m, fi, t, be, bl: (be[g, m], fi, di_of(t)),
-        )
-    )
+    in_specs.append(pl.BlockSpec((1, bf, bd), dx_wo_map))
     args.append(wo)
     in_specs.append(
         pl.BlockSpec(
-            (1, bm, bd), lambda g, m, fi, t, be, bl: (g, m, di_of(t))
+            (1, bm, bd),
+            lambda g, m, fi, t, be, bl, pt: x_map(
+                g, m, di_of(t), be, bl, pt
+            ),
         )
     )
     args.append(dy)
@@ -485,7 +599,7 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
     if gated:
         scratch.insert(1, pltpu.VMEM((bm, bf), jnp.float32))  # g / dg
 
-    def dx_kernel(be_ref, bl_ref, *refs):
+    def dx_kernel(be_ref, bl_ref, pt_ref, *refs):
         if gated:
             (x_ref, wi_ref, wg_ref, wo_ref, dy_ref, dx_ref,
              a_acc, g_acc, dh_acc, dx_acc) = refs
@@ -498,11 +612,11 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
                    act=act, nd=nd, nf=nf, bd=bd)
 
     gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(G, nb, nf, 2 * nd),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, bm, dp), lambda g, m, fi, t, be, bl: (g, m, 0)
+            (1, bm, dp), lambda g, m, fi, t, be, bl, pt: (g, m, 0)
         ),
         scratch_shapes=scratch,
     )
@@ -511,44 +625,50 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
         grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((G, M, dp), xs.dtype),
         interpret=interpret,
-    )(be, bl, *args)
+    )(be, bl, pl_tbl, *args)
 
     # ---- dW: grid (G, nf, nb), row-blocks innermost --------------------
     # Outputs are PER GROUP (G, E, ...) — summed over G below; this is the
     # same contract the padded path gets from vmap'ing the dW kernel over
     # groups. Every expert owns >= 1 block per group (layout contract), so
-    # every (g, e, fi) output block is flushed exactly once.
+    # every (g, e, fi) output block is flushed exactly once. Dead blocks
+    # still take part in the segment walk (an empty expert's single dead
+    # block flushes its zeroed accumulators — that is how it emits zero
+    # dW), but their INPUT windows pin to the previous live block (m
+    # innermost here, so the pin targets the previous step's resident
+    # tiles at the same fi) and stream nothing.
+    def dw_x_map(g, fi, m, be, bl, pt):
+        return (g, jnp.where(bl[g, m] > 0, m, pt[g, m]), 0)
+
+    def dw_wi_map(g, fi, m, be, bl, pt):
+        mm = jnp.where(bl[g, m] > 0, m, pt[g, m])
+        return (be[g, mm], 0, fi)
+
+    def dw_wo_map(g, fi, m, be, bl, pt):
+        mm = jnp.where(bl[g, m] > 0, m, pt[g, m])
+        return (be[g, mm], fi, 0)
+
     in_specs = [
-        pl.BlockSpec((1, bm, dp), lambda g, fi, m, be, bl: (g, m, 0)),
-        pl.BlockSpec(
-            (1, dp, bf), lambda g, fi, m, be, bl: (be[g, m], 0, fi)
-        ),
+        pl.BlockSpec((1, bm, dp), dw_x_map),
+        pl.BlockSpec((1, dp, bf), dw_wi_map),
     ]
     args = [xs, wi]
     if gated:
-        in_specs.append(
-            pl.BlockSpec(
-                (1, dp, bf), lambda g, fi, m, be, bl: (be[g, m], 0, fi)
-            )
-        )
+        in_specs.append(pl.BlockSpec((1, dp, bf), dw_wi_map))
         args.append(wg)
-    in_specs.append(
-        pl.BlockSpec(
-            (1, bf, dp), lambda g, fi, m, be, bl: (be[g, m], fi, 0)
-        )
-    )
+    in_specs.append(pl.BlockSpec((1, bf, dp), dw_wo_map))
     args.append(wo)
-    in_specs.append(
-        pl.BlockSpec((1, bm, dp), lambda g, fi, m, be, bl: (g, m, 0))
-    )
+    in_specs.append(pl.BlockSpec((1, bm, dp), dw_x_map))
     args.append(dy)
 
     out_specs = [
         pl.BlockSpec(
-            (1, 1, dp, bf), lambda g, fi, m, be, bl: (g, be[g, m], 0, fi)
+            (1, 1, dp, bf),
+            lambda g, fi, m, be, bl, pt: (g, be[g, m], 0, fi),
         ),
         pl.BlockSpec(
-            (1, 1, bf, dp), lambda g, fi, m, be, bl: (g, be[g, m], fi, 0)
+            (1, 1, bf, dp),
+            lambda g, fi, m, be, bl, pt: (g, be[g, m], fi, 0),
         ),
     ]
     out_shape = [
@@ -564,13 +684,13 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
             1,
             pl.BlockSpec(
                 (1, 1, dp, bf),
-                lambda g, fi, m, be, bl: (g, be[g, m], 0, fi),
+                lambda g, fi, m, be, bl, pt: (g, be[g, m], 0, fi),
             ),
         )
         out_shape.insert(1, jax.ShapeDtypeStruct((G, E, dp, fp), wg.dtype))
         scratch.insert(1, pltpu.VMEM((dp, bf), jnp.float32))
 
-    def dw_kernel(be_ref, bl_ref, *refs):
+    def dw_kernel(be_ref, bl_ref, pt_ref, *refs):
         if gated:
             (x_ref, wi_ref, wg_ref, wo_ref, dy_ref,
              dwi_ref, dwg_ref, dwo_ref,
@@ -584,7 +704,7 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
                    act=act, nb=nb)
 
     gs = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(G, nf, nb),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -595,7 +715,7 @@ def _grouped_mlp_pallas_bwd(xs, wi, wg, wo, dy, be, bl, *, act: str,
         grid_spec=gs,
         out_shape=out_shape,
         interpret=interpret,
-    )(be, bl, *args)
+    )(be, bl, pl_tbl, *args)
     if gated:
         dwi_pg, dwg_pg, dwo_pg = dws
     else:

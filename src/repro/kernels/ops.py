@@ -17,6 +17,7 @@ Every op takes ``implementation``:
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -145,12 +146,33 @@ def flash_attention(
     )
 
 
+# One-time flag for the rwkv6 "auto" fallback warning below; tests reset
+# it to re-arm the warning.
+_RWKV6_AUTO_WARNED = False
+
+
 def rwkv6(r, k, v, w, u, *, initial_state=None, chunk=64,
           implementation="xla"):
     """RWKV-6 WKV. Returns (out, final_state)."""
     if implementation == "auto":
-        # No custom-VJP rwkv6 kernel yet (ROADMAP open item): "auto"
-        # stays on the chunked XLA path, which is differentiable.
+        # No custom-VJP rwkv6 Pallas kernel yet (ROADMAP open item):
+        # unlike expert_ffn / flash_attention, "auto" resolves to the
+        # chunked XLA path EVERYWHERE — including TPU — so rwkv6
+        # training steps do not get the kernel-fused backward the other
+        # hot paths get. Warn once (at trace time) so the perf cliff is
+        # visible instead of silent; pass implementation="xla"
+        # explicitly to acknowledge the fallback and silence this.
+        global _RWKV6_AUTO_WARNED
+        if not _RWKV6_AUTO_WARNED:
+            _RWKV6_AUTO_WARNED = True
+            warnings.warn(
+                "rwkv6 implementation='auto' falls back to the chunked "
+                "XLA path (no custom-VJP Pallas rwkv6 kernel yet — "
+                "ROADMAP open item); training through 'auto' does not "
+                "get a kernel-fused backward here. Pass "
+                "implementation='xla' to silence this warning.",
+                stacklevel=2,
+            )
         implementation = "xla"
     if implementation == "ref":
         return _ref.rwkv6_ref(r, k, v, w, u, initial_state=initial_state)

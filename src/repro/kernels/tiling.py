@@ -96,6 +96,30 @@ def tune_expert_tiles(
     return bc, bf, bd
 
 
+def grouped_walk_fwd_bytes(
+    live_blocks: int, total_blocks: int, bm: int, d: int, f: int,
+    n_weights: int = 3, *, compacted: bool = True, itemsize: int = 2,
+) -> int:
+    """Modeled forward HBM bytes of the grouped-GEMM block walk
+    (kernels/grouped_mlp.py), shared by benchmarks/roofline.py and
+    benchmarks/kernels_micro.py.
+
+    Per visited row-block the walk streams its owner's full weight set
+    (``n_weights * d * f``: wi + wo, + wg when gated) and the block's
+    ``bm * d`` input rows; every block's output rows are written
+    (dead blocks write zeros — part of the layout contract). The
+    *static* walk streams x/weight tiles for dead blocks too; the
+    *compacted* walk pins dead steps to the previous live block's
+    resident tiles, so only live blocks pay input bytes — bytes become
+    ragged like FLOPs.
+    """
+    read_blocks = live_blocks if compacted else total_blocks
+    w_bytes = read_blocks * n_weights * d * f * itemsize
+    x_bytes = read_blocks * bm * d * itemsize
+    y_bytes = total_blocks * bm * d * itemsize
+    return w_bytes + x_bytes + y_bytes
+
+
 def attention_tile_vmem_bytes(bq: int, bk: int, dh: int) -> int:
     """Worst-case resident f32 bytes across the flash-attention kernels
     (fwd / dq / dkv). The dkv kernel dominates: q+do tiles, k/v tiles,

@@ -35,6 +35,14 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes, **_MESH_KW(len(axes)))
 
 
+def ep_degree(mesh) -> int:
+    """Expert-parallel width of a mesh: the size of the EP a2a axis
+    (sharding/logical.py EP_AXIS, i.e. ``model``); 1 when absent."""
+    from repro.sharding.logical import EP_AXIS
+
+    return dict(mesh.shape).get(EP_AXIS, 1)
+
+
 # v5e hardware constants used by the roofline (benchmarks/roofline.py).
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

@@ -44,6 +44,16 @@ def main() -> None:
                          "'sorted' routes via token-sorting into a "
                          "ragged buffer + grouped-GEMM kernel (FFN "
                          "FLOPs independent of capacity factor)")
+    ap.add_argument("--ep", default="none", choices=["none", "a2a"],
+                    help="expert parallelism for --dispatch sorted: "
+                         "'none' = batch-sharded ragged buffer + FSDP "
+                         "expert-weight gather (weights move); 'a2a' = "
+                         "shard_map expert-parallel all-to-all over the "
+                         "'model' mesh axis (tokens move, weights stay)")
+    ap.add_argument("--ep-budget-factor", type=float, default=2.0,
+                    help="EP a2a send-buffer row budget as a multiple of "
+                         "the balanced per-peer share; overflow is "
+                         "dropped like capacity overflow")
     ap.add_argument("--upcycle-from", default="",
                     help="dense checkpoint dir to sparse-upcycle from")
     ap.add_argument("--peak-lr", type=float, default=0.01)
@@ -58,6 +68,16 @@ def main() -> None:
     from repro.training.train_loop import PreemptionSignal
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.moe is not None and args.ep != "none":
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(
+                cfg.moe, ep=args.ep,
+                ep_budget_factor=args.ep_budget_factor,
+            ),
+        )
     opt = adafactor(inverse_sqrt(peak=args.peak_lr,
                                  warmup_steps=args.warmup))
     tc = TrainConfig(grad_accum=args.grad_accum,

@@ -91,6 +91,31 @@ def make_rules(
     return base
 
 
+# The mesh axis the sorted-dispatch expert-parallel all-to-all runs over.
+# Matches PARAM_RULES["expert"]: expert weights already live on `model`,
+# so the EP path keeps them resident and moves tokens instead.
+EP_AXIS = "model"
+
+
+def expert_parallel_layout(mesh, num_experts: int):
+    """EP layout for the sorted-dispatch all-to-all (core/ep.py), or
+    ``None`` when the mesh cannot host it (no ``model`` axis, axis of
+    size 1, or experts not divisible — the same graceful-fallback
+    discipline as the rules engine, cf. grok's E=8 on a 16-wide axis).
+
+    Returns ``(ep_axis, ep_size, token_axes)``: the a2a axis, its device
+    count, and the full tuple of mesh axes the token-group dim shards
+    over (every device owns a distinct token shard; expert weights are
+    sharded over ``ep_axis`` and replicated over the rest).
+    """
+    if mesh is None or EP_AXIS not in mesh.axis_names:
+        return None
+    ep = dict(mesh.shape)[EP_AXIS]
+    if ep <= 1 or num_experts % ep:
+        return None
+    return EP_AXIS, ep, tuple(mesh.axis_names)
+
+
 def spec_for(logical: str, shape: tuple[int, ...], mesh: Mesh, rules: Rules) -> P:
     """PartitionSpec for one tensor given its space-joined logical axes."""
     names = logical.split() if logical else []

@@ -1,6 +1,8 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
 across shapes and dtypes — forward AND ``jax.grad`` (the custom-VJP
 backward kernels)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -343,6 +345,45 @@ def test_rwkv6_state_chaining():
     )
 
 
+def test_rwkv6_auto_warns_once_and_pins_chunked_xla_fallback():
+    """implementation="auto" has no custom-VJP rwkv6 kernel to route to
+    (ROADMAP open item): it must take the chunked XLA path — identical
+    outputs AND grads to implementation="xla" — and say so with a
+    one-time warning instead of silently downgrading the perf path."""
+    from repro.kernels import ops as ops_mod
+
+    B, T, H, K = 1, 16, 2, 8
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.6 + 0.3
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+
+    ops_mod._RWKV6_AUTO_WARNED = False  # re-arm the one-time warning
+    with pytest.warns(UserWarning, match="chunked XLA"):
+        got, _ = ops.rwkv6(r, k, v, w, u, chunk=8, implementation="auto")
+    want, _ = ops.rwkv6(r, k, v, w, u, chunk=8, implementation="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    # one-time: a second call must not warn again
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ops.rwkv6(r, k, v, w, u, chunk=8, implementation="auto")
+
+    def loss(impl, *args):
+        return jnp.sum(ops.rwkv6(*args, chunk=8, implementation=impl)[0])
+
+    g_auto = jax.grad(lambda *a: loss("auto", *a), argnums=(0, 1, 2))(
+        r, k, v, w, u
+    )
+    g_xla = jax.grad(lambda *a: loss("xla", *a), argnums=(0, 1, 2))(
+        r, k, v, w, u
+    )
+    for a, b in zip(g_auto, g_xla):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------------------------
 # grouped_mlp (sorted ragged dispatch kernel)
 # ---------------------------------------------------------------------------
@@ -465,6 +506,37 @@ def test_grouped_mlp_block_tables():
     # tail 2 blocks clamp to e3.
     assert be[0].tolist() == [0, 0, 1, 2, 3, 3, 3]
     assert bl[0].tolist() == [1, 1, 0, 1, 1, 0, 0]
+
+
+def test_grouped_mlp_prev_live_table():
+    """prev_live pins each dead block to the most recent live block (0
+    when none precedes it) — the compacted walk's no-fetch alias."""
+    from repro.kernels.grouped_mlp import prev_live_table
+
+    bl = jnp.asarray([[1, 1, 0, 1, 1, 0, 0], [0, 0, 1, 0, 1, 1, 0]],
+                     jnp.int32)
+    pt = prev_live_table(bl)
+    assert pt[0].tolist() == [0, 1, 1, 3, 4, 4, 4]
+    assert pt[1].tolist() == [0, 0, 2, 2, 4, 5, 5]
+
+
+def test_grouped_walk_bytes_ragged_with_dead_blocks():
+    """The compacted walk's modeled bytes track live blocks only; the
+    static walk pays for dead blocks too. With zero dead blocks the two
+    walks agree exactly."""
+    from repro.kernels.tiling import grouped_walk_fwd_bytes
+
+    live, total, bm, d, f = 31, 72, 128, 2048, 5632
+    compact = grouped_walk_fwd_bytes(live, total, bm, d, f, 3,
+                                     compacted=True)
+    static = grouped_walk_fwd_bytes(live, total, bm, d, f, 3,
+                                    compacted=False)
+    assert compact < static
+    # saved = dead blocks' weight + x streaming
+    dead = total - live
+    assert static - compact == dead * (3 * d * f + bm * d) * 2
+    assert grouped_walk_fwd_bytes(total, total, bm, d, f, 3,
+                                  compacted=True) == static
 
 
 def test_grouped_mlp_rows_independent_of_capacity_factor():

@@ -107,3 +107,23 @@ def test_rank_mismatch_raises():
     m = mesh2()
     with pytest.raises(ValueError):
         spec_for("embed mlp", (4, 4, 4), m, pr(m))
+
+
+def test_expert_parallel_layout():
+    """EP layout (sorted-dispatch a2a, core/ep.py) follows the rules
+    engine's graceful-fallback discipline: None when the mesh has no
+    model axis / size-1 axis / indivisible experts."""
+    from repro.sharding.logical import expert_parallel_layout
+
+    m2, m3 = mesh2(), mesh3()
+    assert expert_parallel_layout(m2, 32) == \
+        ("model", 16, ("data", "model"))
+    assert expert_parallel_layout(m3, 64) == \
+        ("model", 16, ("pod", "data", "model"))
+    # grok: E=8 does not divide the 16-wide axis -> fallback (None)
+    assert expert_parallel_layout(m2, 8) is None
+    assert expert_parallel_layout(None, 32) is None
+    data_only = _abstract_mesh((16,), ("data",))
+    assert expert_parallel_layout(data_only, 32) is None
+    ep1 = _abstract_mesh((16, 1), ("data", "model"))
+    assert expert_parallel_layout(ep1, 32) is None
