@@ -147,6 +147,47 @@ def kernel_rooflines() -> list[tuple[str, float, str]]:
         3 * rag_w_bytes + 3 * nf * 2 * rag_x_bytes
         + M * d * 2 + E * 3 * d * f * 2,
     ))
+    # Paged flash-decode (kernels/decode_attention.py) at a serving
+    # shape: 8 slots, GQA 16 query / 2 kv heads, dh=128, 16-token KV
+    # blocks, ragged lengths in a max_len=4096 engine. Decode is
+    # HBM-bound with arithmetic intensity == the GQA ratio G (every kv
+    # byte feeds G query heads); what the paged walk buys is the BYTES
+    # term scaling with each slot's live blocks instead of max_len —
+    # the bytes_ratio row is the whole point.
+    from repro.kernels.tiling import (
+        decode_attention_flops,
+        paged_decode_fwd_bytes,
+    )
+
+    Bd, Hd, Khd, dhd, bsd, mxd = 8, 16, 2, 128, 16, 4096
+    lens = [256, 512, 1024, 1536, 2048, 2560, 3072, 3840]
+    dec_fl = decode_attention_flops(lens, Hd, dhd)
+    dec_by = paged_decode_fwd_bytes(lens, bsd, Khd, dhd, n_heads=Hd)
+    rows.append(_roofline_row(
+        "roofline/kernel.decode_attention.fwd", dec_fl, dec_by
+    ))
+    dense_by = paged_decode_fwd_bytes(
+        [mxd] * Bd, bsd, Khd, dhd, n_heads=Hd
+    )
+    rows.append((
+        "roofline/kernel.decode_attention.paged_vs_dense",
+        0.0,
+        f"paged_bytes={dec_by:.3e} dense_maxlen_bytes={dense_by:.3e} "
+        f"bytes_ratio={dec_by / dense_by:.2f} "
+        f"mean_len={sum(lens) // len(lens)} max_len={mxd} "
+        "(paged reads track live blocks; dense pays max_len per slot)",
+    ))
+    # bf16 pools halve the kv byte term (the tentpole's bf16 cache
+    # reads); f32 shown for the parity-test configuration.
+    dec_by_f32 = paged_decode_fwd_bytes(
+        lens, bsd, Khd, dhd, n_heads=Hd, itemsize=4
+    )
+    rows.append((
+        "roofline/kernel.decode_attention.cache_dtype",
+        0.0,
+        f"bf16_bytes={dec_by:.3e} f32_bytes={dec_by_f32:.3e} "
+        f"ratio={dec_by / dec_by_f32:.2f}",
+    ))
     B, H, Sq, dh = 8, 16, 4096, 128
     bq = 512  # flash_attention.py default
     nq = Sq // bq

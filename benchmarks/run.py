@@ -18,6 +18,7 @@ MODULES = [
     "fig10_experts_layers",
     "fig13_expert_init",
     "kernels_micro",
+    "serve_bench",
     "roofline",
 ]
 

@@ -1,12 +1,18 @@
-"""Serve an upcycled MoE with batched requests (prefill + decode loop).
+"""Serve an upcycled MoE: static batch, or paged continuous batching.
 
-    PYTHONPATH=src python examples/serve_moe.py
+    PYTHONPATH=src python examples/serve_moe.py [--paged] \
+        [--block-size 8] [--stream]
 
-Builds a small upcycled model, then serves a batch of prompts through the
-ServeEngine (same decode path the decode_32k / long_500k dry-run cells
-lower). Demonstrates: Top-K decode routing (paper §3.1), KV-cache decode,
-greedy + temperature sampling.
+Builds a small upcycled model, then serves prompts through the
+ServeEngine. Default mode demonstrates the static batch (Top-K decode
+routing per paper §3.1, KV-cache decode, greedy + temperature sampling);
+``--paged`` demonstrates the production path: paged KV cache, staggered
+request arrivals admitted mid-flight, per-token streaming, and
+early-finish eviction freeing KV blocks for the queue. Decode runs
+dropless (capacity >= experts) so continuous batching is
+output-identical to serving each request alone.
 """
+import argparse
 import dataclasses
 
 import jax
@@ -15,10 +21,10 @@ from repro.configs import MoECfg, get_reduced
 from repro.core.upcycle import upcycle_params
 from repro.models import model_zoo as zoo
 from repro.models import param as pm
-from repro.training.serve import ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 
-def main():
+def build():
     dense_cfg = get_reduced("granite-moe-1b-a400m").dense_parent()
     sparse_cfg = dataclasses.replace(
         dense_cfg,
@@ -31,12 +37,47 @@ def main():
     sparse = upcycle_params(dense, dense_cfg, sparse_cfg,
                             jax.random.PRNGKey(1))
     params, _ = pm.split(sparse)
+    return params, sparse_cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--stream", action="store_true")
+    args = ap.parse_args()
+    params, sparse_cfg = build()
+    prompts = [[10, 42, 7], [99, 3], [5, 5, 5, 5], [200, 17]]
+
+    if args.paged:
+        eng = ServeEngine(
+            params, sparse_cfg,
+            ServeConfig(max_batch=2, max_len=128, paged=True,
+                        block_size=args.block_size),
+        )
+        # 4 requests through 2 slots: rid 2/3 queue and are admitted
+        # mid-flight as earlier requests finish and free their blocks.
+        reqs = [
+            Request(rid=i, prompt=p, max_new=6 + 3 * i, arrival=i)
+            for i, p in enumerate(prompts)
+        ]
+        on_token = (
+            (lambda rid, t: print(f"  req{rid} += {t}", flush=True))
+            if args.stream else None
+        )
+        print("[serve] continuous batching, 2 slots, staggered arrivals:")
+        outs, stats = eng.serve(reqs, on_token=on_token)
+        for i, p in enumerate(prompts):
+            s = stats[i]
+            print(f"  request {i}: prompt={p} -> {outs[i][len(p):]} "
+                  f"(arrived@{s['arrival']} admitted@{s['admitted_at']} "
+                  f"done@{s['finished_at']})")
+        return
 
     eng = ServeEngine(
         params, sparse_cfg,
         ServeConfig(max_batch=4, max_len=128, temperature=0.0),
     )
-    prompts = [[10, 42, 7], [99, 3], [5, 5, 5, 5], [200, 17]]
     print("[serve] greedy generation, batch of 4:")
     for i, seq in enumerate(eng.generate(prompts, max_new=12)):
         print(f"  request {i}: prompt={prompts[i]} -> {seq[len(prompts[i]):]}")

@@ -33,15 +33,18 @@ echo "[verify] dispatch parity on a forced 8-device CPU mesh"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   python -m pytest -x -q tests/test_ep_dispatch.py
 
-echo "[verify] kernel micro-bench + roofline (smoke mode)"
+echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
 # sorted-dispatch path at capacity factors 1.0/1.25/2.0, and the
-# compacted block walk's dead-block byte-savings row); roofline keeps
-# the static per-kernel FLOP/byte models — now including the
-# ragged-bytes ratios and the EP-a2a vs weight-gather comm crossover —
-# importable and consistent.
+# compacted block walk's dead-block byte-savings row); serve_bench runs
+# the continuous-batching vs static-batch comparison under a Poisson
+# arrival trace (the paged serve subsystem's tests themselves —
+# tests/test_paged_decode.py, tests/test_serve_paged.py — run in the
+# tier-1 pytest above); roofline keeps the static per-kernel FLOP/byte
+# models — ragged-bytes ratios, paged-vs-dense decode bytes, the EP-a2a
+# vs weight-gather comm crossover — importable and consistent.
 REPRO_BENCH_SMOKE=1 PYTHONPATH="$PYTHONPATH:." \
-  python -m benchmarks.run --only kernels_micro,roofline
+  python -m benchmarks.run --only kernels_micro,serve_bench,roofline
 
 echo "[verify] OK"

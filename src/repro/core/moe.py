@@ -221,6 +221,7 @@ def moe_apply(
     ctx: Optional[ShardCtx] = None,
     implementation: str = "xla",
     sorted_block: int = 128,
+    token_mask=None,
 ):
     """x: (B, S, d) or (N, d). Returns (y, metrics dict).
 
@@ -228,6 +229,14 @@ def moe_apply(
     (ragged grouped GEMM; ``sorted_block`` is the row-block alignment of
     the ragged buffer — 128 matches the TPU kernel's MXU tiles, tests use
     smaller blocks to keep interpret-mode buffers tiny).
+
+    ``token_mask``: None, or a bool array broadcastable to x's token dims
+    (B, S) — False marks dead tokens (the continuous-batching engine's
+    free decode slots): they claim no experts, no capacity, and no ragged
+    grouped-GEMM rows, so expert compute scales with LIVE tokens rather
+    than the static decode batch. Dead tokens' outputs are zero
+    (residual passthrough); live tokens are bit-identical to an unmasked
+    call with the same group composition.
     """
     router_kind = router_kind or moe.router
     ep_overflow = jnp.zeros((), jnp.float32)
@@ -236,11 +245,20 @@ def moe_apply(
     xg, n, pad = _group(x2d, moe.group_size)
     G, g, d = xg.shape
 
+    mg = None
+    if token_mask is not None:
+        m1 = jnp.broadcast_to(
+            token_mask, orig_shape[:-1]
+        ).reshape(-1).astype(bool)
+        if pad:
+            m1 = jnp.pad(m1, (0, pad))
+        mg = m1.reshape(G, g)
+
     logits = jnp.einsum(
         "Ggd,de->Gge", xg, params["router"]["w"],
         preferred_element_type=jnp.float32,
     )
-    r = R.route(logits, moe, router_kind)
+    r = R.route(logits, moe, router_kind, token_mask=mg)
     cap = r.token_idx.shape[-1]
 
     if dispatch == "einsum":

@@ -104,15 +104,24 @@ def route_top_k(
     *,
     k: Optional[int] = None,
     bpr: Optional[bool] = None,
+    token_mask: Optional[jax.Array] = None,
 ) -> Routing:
     """Top-K token-choice routing (Shazeer et al. 2017 / GShard) with
-    capacity buffers, optional Batch Prioritized Routing (paper §B.1)."""
+    capacity buffers, optional Batch Prioritized Routing (paper §B.1).
+
+    ``token_mask`` (G, g) bool: False marks dead tokens (continuous-
+    batching decode slots that hold no request) — their assignments are
+    forced to the trash expert id E *before* capacity accounting, so
+    they claim no capacity, appear in no dispatch table, and carry zero
+    combine weight. Live tokens' routing is unchanged."""
     G, g, E = logits.shape
     k = moe.top_k if k is None else k
     bpr = moe.bpr if bpr is None else bpr
     cap = capacity(g, moe)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     top_w, top_e = jax.lax.top_k(probs, k)  # (G, g, K)
+    if token_mask is not None:
+        top_e = jnp.where(token_mask[..., None], top_e, E)
 
     def positions_of(top_e_local):
         """Capacity claims in token-major, k-minor order."""
@@ -154,6 +163,8 @@ def route_top_k(
         pos = positions_of(top_e)
         keep = pos < cap
 
+    if token_mask is not None:
+        keep = keep & token_mask[..., None]
     w = top_w * keep
     if moe.normalize_combine_weights:
         denom = jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
@@ -171,12 +182,23 @@ def route_top_k(
     token_idx = token_idx[:, :E, :cap]
     combine = combine[:, :E, :cap]
 
-    dropped = jnp.mean(1.0 - jnp.any(keep, axis=-1).astype(jnp.float32))
-
-    # Load-balance aux loss (Switch/GShard form on top-1 assignments).
+    # Metrics normalize over LIVE tokens when a mask is present, so a
+    # mostly-free decode batch doesn't read as "75% dropped" and dead
+    # tokens' router probs don't dilute the load-balance terms.
+    no_keep = 1.0 - jnp.any(keep, axis=-1).astype(jnp.float32)
+    # Load-balance aux loss (Switch/GShard form on top-1 assignments);
+    # dead tokens' top_e is E, so their one-hot rows are already zero.
     top1 = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
-    density = top1.mean(axis=1)  # (G, E) fraction of tokens -> e
-    p_mean = probs.mean(axis=1)  # (G, E)
+    if token_mask is None:
+        dropped = jnp.mean(no_keep)
+        density = top1.mean(axis=1)  # (G, E) fraction of tokens -> e
+        p_mean = probs.mean(axis=1)  # (G, E)
+    else:
+        live = token_mask.astype(jnp.float32)  # (G, g)
+        n_live = jnp.maximum(live.sum(-1, keepdims=True), 1.0)  # (G, 1)
+        dropped = jnp.mean((no_keep * live).sum(-1) / n_live[:, 0])
+        density = top1.sum(axis=1) / n_live
+        p_mean = (probs * live[..., None]).sum(axis=1) / n_live
     aux = E * jnp.mean(jnp.sum(density * p_mean, axis=-1))
 
     return Routing(
@@ -191,13 +213,21 @@ def route_top_k(
     )
 
 
-def route(logits: jax.Array, moe: MoECfg, router_kind: str) -> Routing:
+def route(logits: jax.Array, moe: MoECfg, router_kind: str, *,
+          token_mask: Optional[jax.Array] = None) -> Routing:
     if router_kind == "expert_choice":
+        if token_mask is not None:
+            # EC's per-expert top-cap would need column-wise masking;
+            # decoders (the only place dead decode slots exist) always
+            # route token-choice (stack_router_kind, paper §3.1).
+            raise ValueError(
+                "token_mask is only supported by token-choice routers"
+            )
         return route_expert_choice(logits, moe)
     if router_kind == "top_k":
-        return route_top_k(logits, moe)
+        return route_top_k(logits, moe, token_mask=token_mask)
     if router_kind == "switch":
-        return route_top_k(logits, moe, k=1)
+        return route_top_k(logits, moe, k=1, token_mask=token_mask)
     raise ValueError(f"unknown router {router_kind!r}")
 
 

@@ -146,6 +146,45 @@ def flash_attention(
     )
 
 
+def decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                     implementation="xla"):
+    """Paged single-query GQA attention over a block-pooled KV cache —
+    the continuous-batching serving hot path (repro/serve).
+
+    q: (B, 1, H, dh) one query token per sequence slot;
+    k_pool/v_pool: (P, bs, Kh, dh) global KV block pools;
+    block_tables: (B, nb) int32 pool block ids per slot;
+    lengths: (B,) int32 valid kv tokens per slot (0 = free slot ->
+    exact-zero output).
+
+    * ``pallas`` — scalar-prefetch block-table walk with online softmax
+      (kernels/decode_attention.py; interpret mode on CPU). Reads scale
+      with ``ceil(length/bs)`` live blocks per slot, not ``nb``.
+    * ``xla`` / ``ref`` — gather each slot's blocks into a dense
+      ``(B, nb*bs, Kh, dh)`` view and run the masked-softmax oracle
+      (``models/attention._decode_attention``): the production non-TPU
+      fallback AND the parity ground truth (tests/test_paged_decode.py).
+
+    Serving-only: no VJP (training-through-decode is a ROADMAP item).
+    """
+    implementation = _resolve(implementation)
+    if implementation == "pallas":
+        from repro.kernels import decode_attention as da
+
+        y = da.paged_decode_attention_pallas(
+            q[:, 0], k_pool, v_pool, block_tables, lengths,
+            interpret=INTERPRET_DEFAULT,
+        )
+        return y[:, None]
+    from repro.models.attention import _decode_attention
+
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    k = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    return _decode_attention(q, k, v, lengths)
+
+
 # One-time flag for the rwkv6 "auto" fallback warning below; tests reset
 # it to re-arm the warning.
 _RWKV6_AUTO_WARNED = False

@@ -120,6 +120,33 @@ def grouped_walk_fwd_bytes(
     return w_bytes + x_bytes + y_bytes
 
 
+def paged_decode_fwd_bytes(
+    lengths, block_size: int, kv_heads: int, head_dim: int, *,
+    n_heads: int, itemsize: int = 2, q_itemsize: int = 4,
+) -> int:
+    """Modeled HBM bytes of ONE paged flash-decode step over a slot
+    batch (kernels/decode_attention.py), shared by benchmarks/roofline.
+
+    Per slot the block-table walk streams k + v for the slot's LIVE
+    blocks only (``ceil(len/bs) * bs`` rows — dead steps pin to the last
+    live block and fetch nothing), plus the (H, dh) query read and
+    output write. A dense ``(B, max_len)`` cache read pays ``max_len``
+    rows per slot regardless of length — pass ``lengths = [max_len]*B``
+    to model it (the ``paged_vs_dense`` roofline ratio).
+    """
+    kv_rows = sum(
+        -(-int(n) // block_size) * block_size for n in lengths
+    )
+    kv_bytes = 2 * kv_rows * kv_heads * head_dim * itemsize
+    qo_bytes = 2 * len(lengths) * n_heads * head_dim * q_itemsize
+    return kv_bytes + qo_bytes
+
+
+def decode_attention_flops(lengths, n_heads: int, head_dim: int) -> int:
+    """Single-query GQA decode FLOPs: qk^T + pv = 4*H*len*dh per slot."""
+    return sum(4 * n_heads * int(n) * head_dim for n in lengths)
+
+
 def attention_tile_vmem_bytes(bq: int, bk: int, dh: int) -> int:
     """Worst-case resident f32 bytes across the flash-attention kernels
     (fwd / dq / dkv). The dkv kernel dominates: q+do tiles, k/v tiles,

@@ -1,8 +1,14 @@
 """Serving launcher: load a checkpoint (or fresh params) and serve batched
-requests from stdin or a demo batch.
+requests — static batch or paged continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-1b-a400m \
-        --reduced [--ckpt-dir DIR] [--max-new 16] [--temperature 0.8]
+        --reduced [--ckpt-dir DIR] [--max-new 16] [--temperature 0.8] \
+        [--paged] [--block-size 16] [--stream]
+
+``--paged`` switches to the continuous-batching engine (paged KV cache,
+mid-flight admission/eviction, Pallas paged flash-decode on TPU);
+``--stream`` prints tokens as they are sampled instead of waiting for
+the full batch.
 """
 from __future__ import annotations
 
@@ -19,12 +25,18 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over a paged KV cache")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV tokens per pool block (--paged)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated (--paged)")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced
     from repro.models import model_zoo as zoo
     from repro.models import param as pm
-    from repro.training.serve import ServeConfig, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
@@ -42,9 +54,28 @@ def main() -> None:
     eng = ServeEngine(
         params, cfg,
         ServeConfig(max_batch=args.max_batch, max_len=256,
-                    temperature=args.temperature),
+                    temperature=args.temperature,
+                    paged=args.paged, block_size=args.block_size),
     )
     demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
+    if args.paged:
+        # Staggered arrivals show mid-flight admission; --stream prints
+        # per-token, otherwise the final sequences.
+        reqs = [
+            Request(rid=i, prompt=p, max_new=args.max_new, arrival=2 * i)
+            for i, p in enumerate(demo)
+        ]
+        on_token = (
+            (lambda rid, t: print(f"[serve] req{rid} += {t}", flush=True))
+            if args.stream else None
+        )
+        outs, stats = eng.serve(reqs, on_token=on_token)
+        for i, p in enumerate(demo):
+            s = stats[i]
+            print(f"[serve] req{i}: {p} -> {outs[i][len(p):]} "
+                  f"(admitted@{s['admitted_at']} done@{s['finished_at']} "
+                  f"{s['reason']})")
+        return
     for i, seq in enumerate(eng.generate(demo, max_new=args.max_new)):
         print(f"[serve] req{i}: {demo[i]} -> {seq[len(demo[i]):]}")
 

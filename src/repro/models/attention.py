@@ -180,12 +180,23 @@ def attention_apply(
     ctx=None,
     pad_heads_multiple: int = 0,
     implementation: str = "xla",
+    block_tables=None,
 ):
     """Self- or cross-attention.
 
     cache: None, or dict {k: (B, S_max, Kh, dh), v: ...} — functional KV
     cache. cache_index: current length (traced int32) where new kv is
     written. kv_x: encoder states for cross-attention (no cache/causality).
+
+    block_tables: None, or (B, nb) int32 — switches the cache to the
+    PAGED layout {k: (P, bs, Kh, dh), v: ...} (a global block pool,
+    repro/serve): ``cache_index`` becomes the per-slot (B,) int32 length
+    vector. Prefill (Sq > 1, one request at a time) writes the prompt's
+    k/v into the slot's blocks and attends over the local fresh k/v;
+    decode scatters one token per live slot and runs
+    ``ops.decode_attention`` (the Pallas paged flash-decode kernel when
+    ``implementation="pallas"``, the gather + masked-softmax oracle on
+    "xla").
 
     implementation: "xla" | "pallas" | "ref" | "auto" — the flash-attention
     compute path (repro.kernels.ops.flash_attention). "pallas" is fully
@@ -243,14 +254,51 @@ def attention_apply(
 
     if cfg.pos_emb == "rope" and kv_x is None:
         if positions is None:
-            base = 0 if cache_index is None else cache_index
-            positions = jnp.asarray(base) + jnp.arange(Sq)
+            base = jnp.asarray(0 if cache_index is None else cache_index)
+            # Per-slot cache indices (paged decode) broadcast to (B, Sq).
+            if base.ndim:
+                positions = base[:, None] + jnp.arange(Sq)[None]
+            else:
+                positions = base + jnp.arange(Sq)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
 
     q_offset = 0
     kv_len = None
-    if cache is not None and kv_x is None:
+    paged = block_tables is not None and cache is not None and kv_x is None
+    if paged:
+        pool_k, pool_v = cache["k"], cache["v"]
+        if Sq > 1:
+            # Prefill-on-join: one request at a time into its freshly
+            # allocated blocks; attention runs over the LOCAL fresh k/v
+            # (a fresh sequence — same discipline as the dense prefill).
+            if B != 1:
+                raise ValueError(
+                    "paged prefill admits one request at a time (B == 1)"
+                )
+            cache = {
+                "k": paged_prefill_write(pool_k, k, block_tables),
+                "v": paged_prefill_write(pool_v, v, block_tables),
+            }
+        else:
+            lengths = cache_index  # (B,) tokens already cached per slot
+            new_pk = paged_decode_write(pool_k, k, block_tables, lengths)
+            new_pv = paged_decode_write(pool_v, v, block_tables, lengths)
+            cache = {"k": new_pk, "v": new_pv}
+            from repro.kernels import ops
+
+            # Live slots attend over their freshly written token too;
+            # FREE slots (length 0) stay at length 0 — their write went
+            # to the trash block, which is never read, and the kernel's
+            # zero-valid-key guard gives them exact-zero outputs.
+            y = ops.decode_attention(
+                q, new_pk, new_pv, block_tables,
+                lengths + (lengths > 0),
+                implementation=implementation,
+            )
+            out = jnp.einsum("bshk,hkd->bsd", y, wo)
+            return out, cache
+    elif cache is not None and kv_x is None:
         new_k = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1
         )
@@ -295,7 +343,14 @@ def attention_apply(
 
 
 def _decode_attention(q, k, v, kv_len):
-    """q: (B, 1, H, dh); k, v: (B, S, Kh, dh). Softmax over all valid S."""
+    """q: (B, 1, H, dh); k, v: (B, S, Kh, dh). Softmax over all valid S.
+
+    ``kv_len`` may be a scalar (the static-batch engine's shared cache
+    index) or a per-slot (B,) vector (the continuous-batching engine's
+    ragged lengths; 0 marks a free slot and yields an exact-zero output
+    instead of a NaN softmax). This is the oracle the Pallas paged
+    decode kernel is validated against (``ops.decode_attention``).
+    """
     B, _, H, dh = q.shape
     Skv, Kh = k.shape[1], k.shape[2]
     G = H // Kh
@@ -303,9 +358,18 @@ def _decode_attention(q, k, v, kv_len):
     s = jnp.einsum(
         "bkgd,btkd->bkgt", qg, k, preferred_element_type=jnp.float32
     ) * dh ** -0.5
-    mask = jnp.arange(Skv) < kv_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    mask = (
+        jnp.arange(Skv)[None, :]
+        < jnp.reshape(jnp.asarray(kv_len), (-1, 1))
+    )  # (B, Skv) or (1, Skv)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    # Zero-valid-key-safe softmax (identical to jax.nn.softmax wherever
+    # at least one key is valid).
+    m = s.max(axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask[:, None, None, :], jnp.exp(s - m_safe), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
     y = jnp.einsum(
         "bkgt,btkd->bkgd", p, v, preferred_element_type=jnp.float32
     )
@@ -318,6 +382,61 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16)
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
     }
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (repro/serve continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int, *,
+                     dtype=jnp.bfloat16):
+    """Global KV block pool replacing the dense (B, max_len, ...) cache:
+    fixed-size blocks owned by sequence slots via per-slot block tables
+    (allocated/freed by repro.serve.BlockPool). Block 0 is the trash
+    block free slots write into."""
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def paged_prefill_write(pool, kv, block_table):
+    """Write a full prompt's k or v into its slot's blocks.
+
+    pool: (P, bs, Kh, dh); kv: (1, S, Kh, dh) with S % bs == 0 (the
+    serve engine buckets prompt lengths to block multiples — padded tail
+    positions carry garbage that stays masked by the slot length until
+    decode overwrites it); block_table: (1, nb), nb >= S // bs.
+    """
+    bs = pool.shape[1]
+    S = kv.shape[1]
+    if S % bs:
+        raise ValueError(
+            f"paged prefill length ({S}) must be a multiple of the "
+            f"block size ({bs}); bucket the prompt before prefill"
+        )
+    nbu = S // bs
+    blocks = kv[0].reshape(nbu, bs, *kv.shape[2:]).astype(pool.dtype)
+    return pool.at[block_table[0, :nbu]].set(blocks)
+
+
+def paged_decode_write(pool, kv, block_tables, lengths):
+    """Scatter one decode token's k or v per slot into the pool.
+
+    pool: (P, bs, Kh, dh); kv: (B, 1, Kh, dh); block_tables: (B, nb);
+    lengths: (B,) write position per slot (the token count already
+    cached). Free slots (length 0, all-zero table rows) land in trash
+    block 0 — never read.
+    """
+    P, bs = pool.shape[:2]
+    blk = lengths // bs
+    off = lengths % bs
+    bids = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    flat = pool.reshape(P * bs, *pool.shape[2:])
+    flat = flat.at[bids * bs + off].set(kv[:, 0].astype(pool.dtype))
+    return flat.reshape(pool.shape)
 
 
 CACHE_AXES = {"k": "batch cache_seq kv_heads head_dim",

@@ -46,6 +46,12 @@ class ApplyCfg:
     """
 
     dispatch: str = "gather"  # moe dispatch: gather | einsum | sorted
+    # Row-block alignment of the sorted dispatch's ragged buffer. 128
+    # matches the grouped-GEMM kernel's MXU tiles (training / TPU); the
+    # layout guarantees >= 1 block per expert, so tiny decode batches
+    # want a small block (the serve engine picks 8 on the XLA backend —
+    # E*128 floor rows for a 16-assignment decode batch otherwise).
+    sorted_block: int = 128
     moe_impl: str = "auto"  # auto | xla | pallas | ref
     attn_impl: str = "auto"  # auto | xla | pallas | ref
     mixer_impl: str = "xla"
@@ -169,7 +175,8 @@ def _encode(params, batch, cfg: ArchConfig, ac: ApplyCfg, ctx):
         params["encoder"], x, cfg, stk.layer_descs(cfg, stack="encoder"),
         mode="train", causal=False,
         router_kind=stk.stack_router_kind(cfg, stack="encoder"),
-        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
         attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
@@ -199,7 +206,8 @@ def forward_train(
             stk.layer_descs(cfg, stack="decoder"),
             mode="train", causal=False,
             router_kind=stk.stack_router_kind(cfg, stack="encoder"),
-            dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+            dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+            moe_impl=ac.moe_impl,
             attn_impl=ac.attn_impl,
             mixer_impl=ac.mixer_impl, ctx=ctx, remat=ac.remat,
         )
@@ -221,7 +229,8 @@ def forward_train(
         params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
         enc=enc, mode="train", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
-        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
         attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
@@ -337,6 +346,137 @@ def init_serve_cache(
     return cache
 
 
+def init_paged_serve_cache(
+    cfg: ArchConfig, num_blocks: int, block_size: int, *,
+    dtype=jnp.bfloat16,
+):
+    """Paged serve cache: per-layer KV block pools addressed by shared
+    per-slot block tables (repro/serve continuous-batching engine).
+
+    Paged serving is decoder-only + attention-only: encoder-decoder
+    models carry a dense encoder cache and mamba/rwkv6 mixers keep
+    per-slot state vectors with no seq dim to page — both raise here
+    (serve them through the static-batch engine instead)."""
+    if cfg.structure != "decoder_only":
+        raise ValueError(
+            "paged serving supports decoder-only models; "
+            f"{cfg.name} is {cfg.structure}"
+        )
+    descs = stk.layer_descs(cfg, stack="decoder")
+    if any(d.mixer != "attn" for d in descs):
+        raise ValueError(
+            "paged serving requires an attention-only decoder stack "
+            f"(got {sorted({d.mixer for d in descs})} in {cfg.name})"
+        )
+    return {
+        "stack": stk.stack_paged_cache_init(
+            cfg, descs, num_blocks, block_size, dtype=dtype
+        )
+    }
+
+
+def paged_prefill(
+    params,
+    tokens,
+    cache,
+    block_table,
+    length,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """Prefill ONE request into its freshly allocated KV blocks
+    (continuous batching's prefill-on-join).
+
+    tokens: (1, Sp) right-padded prompt with Sp a multiple of the block
+    size (the engine buckets prompt lengths — padded tail k/v land in
+    the slot's own blocks and stay masked by ``length`` until decode
+    overwrites them); block_table: (1, nb) pool block ids; length:
+    traced int32 true prompt length. Returns (cache, logits (1, 1, V))
+    — the logits at the TRUE last prompt position (length - 1), not the
+    padded one.
+    """
+    ac = ac.resolve()
+    params = _cast_params(params, ac.cdtype)
+    x = _embed_decoder_input(params, {"tokens": tokens}, cfg, ac)
+    x = act(ctx, x, "batch seq embed")
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        cache=cache["stack"],
+        cache_index=jnp.zeros((1,), jnp.int32),
+        block_tables=block_table,
+        mode="prefill", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat="none",
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    x_last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(length, jnp.int32) - 1, 1, axis=1
+    )
+    x_last = norm_apply(params["final_norm"], x_last, cfg)
+    logits = head_apply(
+        params.get("head", {}), x_last, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits
+
+
+def paged_decode_step(
+    params,
+    tokens,
+    cache,
+    block_tables,
+    lengths,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """One continuous-batching decode step over the slot batch.
+
+    tokens: (B, 1) current token per slot; block_tables: (B, nb);
+    lengths: (B,) int32 tokens already cached per slot — 0 marks a FREE
+    slot: its token is masked out of MoE routing (no capacity claims,
+    no grouped-GEMM rows — expert compute scales with live slots), its
+    cache write lands in the trash block, and its logits are garbage the
+    engine never samples. Returns (cache, logits (B, 1, V)).
+    """
+    ac = ac.resolve()
+    params = _cast_params(params, ac.cdtype)
+    live = lengths > 0
+    x = embed_apply(
+        params["embed"], tokens, cfg, positions=lengths[:, None]
+    ).astype(ac.cdtype)
+    x = act(ctx, x, "batch seq embed")
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        cache=cache["stack"], cache_index=lengths,
+        block_tables=block_tables,
+        token_mask=live[:, None],
+        mode="decode", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat="none",
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = head_apply(
+        params.get("head", {}), x, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits
+
+
 def serve_cache_axes(cfg: ArchConfig):
     descs = stk.layer_descs(cfg, stack="decoder")
     axes = {"stack": stk.stack_cache_axes(descs)}
@@ -369,7 +509,8 @@ def prefill(
         enc=enc, cache=cache["stack"], cache_index=jnp.asarray(0, jnp.int32),
         mode="prefill", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
-        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
         attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,
@@ -408,7 +549,8 @@ def decode_step(
         cache=cache["stack"], cache_index=cache_index,
         mode="decode", causal=True,
         router_kind=stk.stack_router_kind(cfg, stack="decoder"),
-        dispatch=ac.dispatch, moe_impl=ac.moe_impl,
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
         attn_impl=ac.attn_impl,
         mixer_impl=ac.mixer_impl,
         pad_heads_multiple=ac.pad_heads_multiple,

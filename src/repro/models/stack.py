@@ -137,6 +137,25 @@ def layer_cache_init(
     return c
 
 
+def layer_paged_cache_init(
+    cfg: ArchConfig, desc: LayerDesc, num_blocks: int, block_size: int,
+    *, dtype=jnp.bfloat16
+):
+    """Per-layer KV block pool for the paged serving engine. Paged
+    serving is attention-only: mamba/rwkv6 caches are per-slot state
+    vectors with no seq dim (nothing to page) — the serve engine rejects
+    those stacks up front (see repro/serve)."""
+    if desc.mixer != "attn":
+        raise ValueError(
+            f"paged serving supports attention mixers only, got "
+            f"{desc.mixer!r}"
+        )
+    from repro.models.attention import init_paged_cache
+
+    return {"mixer": init_paged_cache(cfg, num_blocks, block_size,
+                                      dtype=dtype)}
+
+
 def layer_cache_axes(desc: LayerDesc):
     c = {}
     if desc.mixer == "attn":
@@ -171,11 +190,14 @@ def layer_apply(
     causal: bool = True,
     router_kind: str = "top_k",
     dispatch: str = "gather",
+    sorted_block: int = 128,
     moe_impl: str = "xla",
     mixer_impl: str = "xla",
     attn_impl: str = "xla",
     pad_heads_multiple: int = 0,
     ctx: Optional[ShardCtx] = None,
+    block_tables=None,
+    token_mask=None,
 ):
     cache = cache or None
     mix_cache = cache.get("mixer") if cache else None
@@ -189,6 +211,7 @@ def layer_apply(
             ctx=ctx,
             pad_heads_multiple=pad_heads_multiple,
             implementation=attn_impl,
+            block_tables=block_tables,
         )
     elif desc.mixer == "mamba":
         y, mix_cache = ssm.mamba_apply(
@@ -224,8 +247,10 @@ def layer_apply(
             p["ffn"], h, cfg, cfg.moe,
             router_kind=router_kind,
             dispatch=dispatch,
+            sorted_block=sorted_block,
             ctx=ctx,
             implementation=moe_impl,
+            token_mask=token_mask,
         )
         metrics["aux_loss"] = m["aux_loss"]
         metrics["z_loss"] = m["z_loss"]
@@ -322,6 +347,28 @@ def stack_cache_init(
     return {"segments": out}
 
 
+def stack_paged_cache_init(
+    cfg: ArchConfig, descs, num_blocks: int, block_size: int, *,
+    dtype=jnp.bfloat16
+):
+    """Paged serve cache: one KV block pool per layer (stacked over
+    segment repeats like ``stack_cache_init``); every layer's pool is
+    addressed by the SAME per-slot block table (the vLLM layout)."""
+    segs = find_segments(descs)
+    out = []
+    for reps, pdescs in segs:
+        seg = {}
+        for i, d in enumerate(pdescs):
+            one = layer_paged_cache_init(
+                cfg, d, num_blocks, block_size, dtype=dtype
+            )
+            seg[f"pos{i}"] = jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (reps,) + v.shape).copy(), one
+            )
+        out.append(seg)
+    return {"segments": out}
+
+
 def stack_cache_axes(descs):
     segs = find_segments(descs)
     out = []
@@ -349,12 +396,15 @@ def stack_apply(
     causal: bool = True,
     router_kind: str = "top_k",
     dispatch: str = "gather",
+    sorted_block: int = 128,
     moe_impl: str = "xla",
     mixer_impl: str = "xla",
     attn_impl: str = "xla",
     pad_heads_multiple: int = 0,
     ctx: Optional[ShardCtx] = None,
     remat: str = "none",  # none | full | dots | moe
+    block_tables=None,
+    token_mask=None,
 ):
     segs = find_segments(descs)
     totals = zero_metrics()
@@ -385,11 +435,14 @@ def stack_apply(
                     causal=causal,
                     router_kind=router_kind,
                     dispatch=dispatch,
+                    sorted_block=sorted_block,
                     moe_impl=moe_impl,
                     mixer_impl=mixer_impl,
                     attn_impl=attn_impl,
                     pad_heads_multiple=pad_heads_multiple,
                     ctx=ctx,
+                    block_tables=block_tables,
+                    token_mask=token_mask,
                 )
                 mets = jax.tree.map(jnp.add, mets, m)
                 out_cache[f"pos{i}"] = c_new

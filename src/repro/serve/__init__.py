@@ -1,0 +1,61 @@
+"""Production serving subsystem: continuous batching over a paged KV
+cache with a Pallas paged flash-decode kernel.
+
+The static-batch engine (now the ``paged=False`` path of
+:class:`ServeEngine`) allocates a dense ``(B, max_len, ...)`` KV cache
+per call and decodes every request for the worst-case step count. This
+package replaces that on the serving hot path:
+
+=============  =====================================================
+component      role
+=============  =====================================================
+slots          fixed decode-batch positions (``max_batch`` of them);
+               a slot is FREE or ACTIVE (one request), evicted the
+               step its request finishes (scheduler.py)
+block pool     global per-layer KV tensors ``(num_blocks, block_size,
+               Kh, dh)`` + a host-side LIFO free list; block 0 is the
+               reserved trash block free slots write into
+               (paged_cache.py, models/attention.init_paged_cache)
+block tables   per-slot ``(nb,)`` int32 maps slot positions ->
+               pool blocks; allocated atomically on admission
+               (worst-case footprint), freed on completion
+scheduler      FCFS admission at decode-step granularity:
+               queue -> free slot + blocks -> prefill-on-join ->
+               decode until EOS / token budget / max_len
+decode kernel  single-query GQA attention walking each slot's block
+               table via scalar prefetch, online softmax over ragged
+               lengths (kernels/decode_attention.py; XLA gather +
+               masked softmax as oracle/fallback via
+               ``ops.decode_attention``)
+MoE decode     slot batch routes through the sorted grouped-GEMM
+               dispatch with FREE slots masked out of routing, so
+               expert compute scales with live tokens
+=============  =====================================================
+
+Request lifecycle::
+
+    submit -> queued -> [slot + blocks free, arrival reached]
+           -> prefill-on-join (writes the prompt's KV into the slot's
+              blocks while other slots keep decoding)
+           -> decode (one token per engine step, streamed via
+              ``on_token``)
+           -> finish (EOS / budget / max_len) -> blocks freed, slot
+              admits the next queued request mid-flight
+
+``repro.training.serve`` re-exports :class:`ServeConfig` /
+:class:`ServeEngine` for back-compat.
+"""
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.paged_cache import BlockPool, blocks_needed, bucket_len
+from repro.serve.scheduler import Request, Scheduler, Slot
+
+__all__ = [
+    "BlockPool",
+    "Request",
+    "Scheduler",
+    "ServeConfig",
+    "ServeEngine",
+    "Slot",
+    "blocks_needed",
+    "bucket_len",
+]

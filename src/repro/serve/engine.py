@@ -1,0 +1,328 @@
+"""Serving engines: static-batch (legacy) and paged continuous batching.
+
+``ServeEngine`` keeps the original static-batch contract — ``generate``
+packs requests into one fixed batch, prefills the right-padded prompts
+and steps the decode loop over a dense ``(B, max_len, ...)`` KV cache.
+With ``ServeConfig(paged=True)`` the same class runs the production
+path instead:
+
+* **paged KV cache** — per-layer global block pools + per-slot block
+  tables (models/attention, repro.serve.paged_cache); decode attention
+  reads scale with each sequence's live blocks, not ``max_len``.
+* **continuous batching** — a fixed array of decode slots; finished
+  sequences are evicted mid-flight (their blocks return to the pool)
+  and queued requests are admitted the moment a slot and blocks free
+  up, prefilling into their freshly allocated blocks while the other
+  slots keep decoding (scheduler.py).
+* **Pallas paged flash-decode** — ``ApplyCfg(attn_impl="pallas")``
+  routes the decode step through the scalar-prefetch block-table-walk
+  kernel (kernels/decode_attention.py); "xla"/"auto"-on-CPU uses the
+  gather + masked-softmax oracle.
+* **live-token MoE decode** — the slot batch routes through the sorted
+  grouped-GEMM dispatch with free slots masked out of routing entirely,
+  so expert FLOPs track live sequences rather than ``max_batch``.
+
+Decode routing stays Top-K token-choice (paper §3.1) — and, exactly as
+the static engine's docstring warned, token-choice capacity can couple a
+token's routing to its batch, so production decode should run dropless
+(capacity_factor >= num_experts); the continuous-batching identity tests
+pin that regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import model_zoo as zoo
+from repro.serve.paged_cache import BlockPool, bucket_len
+from repro.serve.scheduler import Request, Scheduler
+from repro.sharding import ShardCtx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0  # 0 => greedy
+    cache_dtype: str = "float32"
+    # --- paged continuous-batching engine -------------------------------
+    paged: bool = False
+    block_size: int = 16  # KV tokens per pool block
+    # 0 => auto: 1 trash block + max_batch * ceil(max_len / block_size)
+    # (full capacity — admission never waits on blocks, only on slots).
+    num_blocks: int = 0
+    # Default EOS token for requests that don't set their own (None =
+    # run to the token budget).
+    eos_id: Optional[int] = None
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params,
+        cfg: ArchConfig,
+        sc: Optional[ServeConfig] = None,
+        *,
+        ac: zoo.ApplyCfg = zoo.ApplyCfg(),
+        ctx: Optional[ShardCtx] = None,
+    ):
+        # sc defaults to None, NOT ServeConfig(): a dataclass default
+        # would be one shared mutable instance across every engine.
+        # (ApplyCfg is frozen, so its shared default is harmless.)
+        sc = ServeConfig() if sc is None else sc
+        if sc.paged and cfg.moe is not None and ac.dispatch == "gather":
+            # The serving hot path: live-token ragged dispatch instead of
+            # the padded capacity buffer ("gather" is only ApplyCfg's
+            # generic default — pass einsum/gather explicitly via a
+            # non-default ac to override). The ragged row block follows
+            # the backend: the TPU grouped-GEMM kernel needs MXU-aligned
+            # 128 blocks (its compacted walk already skips dead blocks),
+            # while the XLA ragged_dot fallback wants the f32 sublane
+            # floor — a 128 block would pad a 16-assignment decode batch
+            # to E*128 rows.
+            blk = 128 if ac.resolve().moe_impl == "pallas" else 8
+            ac = dataclasses.replace(
+                ac, dispatch="sorted", sorted_block=blk
+            )
+        self.params, self.cfg, self.sc, self.ac, self.ctx = (
+            params, cfg, sc, ac, ctx
+        )
+        cdtype = jnp.bfloat16 if sc.cache_dtype == "bfloat16" else jnp.float32
+
+        def _prefill(params, tokens, cache):
+            return zoo.prefill(
+                params, {"tokens": tokens}, cache, cfg, ac=ac, ctx=ctx
+            )
+
+        def _step(params, tokens, cache, index):
+            return zoo.decode_step(
+                params, tokens, cache, index, cfg, ac=ac, ctx=ctx
+            )
+
+        self._prefill = jax.jit(_prefill)
+        self._step = jax.jit(_step, donate_argnums=(2,))
+        self._cache_dtype = cdtype
+
+        if sc.paged:
+            # Fail fast on unsupported stacks (enc-dec / mamba / rwkv6):
+            # a throwaway 2-block cache runs the same validation the real
+            # allocation will.
+            zoo.init_paged_serve_cache(cfg, 2, sc.block_size, dtype=cdtype)
+
+            def _pprefill(params, tokens, cache, table, length):
+                return zoo.paged_prefill(
+                    params, tokens, cache, table, length, cfg,
+                    ac=ac, ctx=ctx,
+                )
+
+            def _pstep(params, tokens, cache, tables, lengths):
+                return zoo.paged_decode_step(
+                    params, tokens, cache, tables, lengths, cfg,
+                    ac=ac, ctx=ctx,
+                )
+
+            self._paged_prefill = jax.jit(_pprefill, donate_argnums=(2,))
+            self._paged_step = jax.jit(_pstep, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    # static-batch path (legacy contract)
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts: list[list[int]], max_new: int = 32,
+                 *, rng=None) -> list[list[int]]:
+        """Greedy/temperature generation for a batch of prompts.
+
+        Paged engines route through :meth:`serve` (all requests arrive
+        at tick 0; more prompts than ``max_batch`` simply queue);
+        static engines keep the original fixed-batch loop.
+        """
+        if self.sc.paged:
+            reqs = [
+                Request(rid=i, prompt=list(p), max_new=max_new)
+                for i, p in enumerate(prompts)
+            ]
+            outs, _ = self.serve(reqs, rng=rng)
+            return [outs[i] for i in range(len(prompts))]
+        sc, cfg = self.sc, self.cfg
+        B = len(prompts)
+        assert B <= sc.max_batch
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p  # right padding handled by causality
+        cache = zoo.init_serve_cache(
+            cfg, B, plen + max_new, dtype=self._cache_dtype
+        )
+        cache, logits = self._prefill(self.params, jnp.asarray(toks), cache)
+        out = [list(p) for p in prompts]
+        index = jnp.asarray(plen, jnp.int32)
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        cur = self._sample(logits, rng)
+        for t in range(max_new):
+            for i in range(B):
+                out[i].append(int(cur[i, 0]))
+            if t == max_new - 1:
+                break
+            cache, logits = self._step(self.params, cur, cache, index)
+            index = index + 1
+            rng = jax.random.fold_in(rng, t)
+            cur = self._sample(logits, rng)
+        return out
+
+    def _sample(self, logits, rng):
+        lg = logits[:, -1]
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            rng, lg / self.sc.temperature
+        )[:, None].astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # continuous-batching path
+    # ------------------------------------------------------------------
+
+    def serve(
+        self,
+        requests: list[Request],
+        *,
+        on_token: Optional[Callable[[int, int], None]] = None,
+        rng=None,
+    ):
+        """Run a continuous-batching session over ``requests``.
+
+        Requests become visible at their ``arrival`` tick (decode-step
+        units); admission is FCFS into free slots with prefill-on-join.
+        Tokens stream through ``on_token(rid, token)`` (and each
+        request's own ``on_token``) the moment they are sampled.
+
+        Returns ``(outputs, stats)``: ``outputs[rid]`` is the full
+        prompt + generated sequence (EOS included when hit);
+        ``stats[rid]`` records arrival / admission / first-token /
+        finish ticks, generated count and the finish reason.
+        """
+        if not self.sc.paged:
+            raise ValueError("serve() needs ServeConfig(paged=True)")
+        sc = self.sc
+        bs = sc.block_size
+        nb_max = -(-sc.max_len // bs)
+        num_blocks = sc.num_blocks or (1 + sc.max_batch * nb_max)
+        pool = BlockPool(num_blocks, bs)
+        sched = Scheduler(sc.max_batch, pool, sc.max_len)
+        for r in requests:
+            sched.submit(r)
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        # One device call per session: derive the host seed for the
+        # per-token Gumbel draws (temperature sampling stays on host —
+        # no per-slot device round-trips on the decode hot loop).
+        seed0 = int(jax.random.randint(rng, (), 0, 2 ** 31 - 1))
+
+        B = sc.max_batch
+        cache = zoo.init_paged_serve_cache(
+            self.cfg, num_blocks, bs, dtype=self._cache_dtype
+        )
+        tables = np.zeros((B, nb_max), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        cur = np.zeros((B, 1), np.int32)
+        outs = {r.rid: list(r.prompt) for r in requests}
+
+        def emit(req, slot, tok, step):
+            outs[req.rid].append(tok)
+            slot.generated += 1
+            if on_token is not None:
+                on_token(req.rid, tok)
+            if req.on_token is not None:
+                req.on_token(req.rid, tok)
+
+        def maybe_finish(slot, tok, step):
+            req = slot.request
+            eos = req.eos_id if req.eos_id is not None else sc.eos_id
+            reason = None
+            if eos is not None and tok == eos:
+                reason = "eos"
+            elif slot.generated >= slot.budget:
+                reason = "budget"
+            if reason is None:
+                return False
+            i = slot.index
+            tables[i, :] = 0
+            lengths[i] = 0
+            cur[i, 0] = 0
+            sched.finish(slot, step, reason)
+            return True
+
+        step = 0
+        while sched.has_work:
+            # -- admission: prefill-on-join into freshly allocated blocks
+            for slot in sched.admit(step):
+                i, req = slot.index, slot.request
+                plen = len(req.prompt)
+                sp = bucket_len(plen, bs)
+                tables[i, :] = 0
+                tables[i, :len(slot.blocks)] = slot.blocks
+                toks = np.zeros((1, sp), np.int32)
+                toks[0, :plen] = req.prompt
+                cache, lg = self._paged_prefill(
+                    self.params, jnp.asarray(toks), cache,
+                    jnp.asarray(tables[i:i + 1]),
+                    jnp.asarray(plen, jnp.int32),
+                )
+                slot.length = plen
+                lengths[i] = plen
+                slot.first_token_at = step
+                tok = self._sample_one(
+                    np.asarray(lg[0, 0]), seed0, req.rid, 0
+                )
+                emit(req, slot, tok, step)
+                if not maybe_finish(slot, tok, step):
+                    cur[i, 0] = tok
+
+            active = sched.active
+            if not active:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                step = max(step + 1, nxt)  # idle: fast-forward the clock
+                continue
+
+            # -- one batched decode step over the slot array (free slots
+            # masked out of MoE routing; their writes hit the trash block)
+            cache, logits = self._paged_step(
+                self.params, jnp.asarray(cur), cache,
+                jnp.asarray(tables), jnp.asarray(lengths),
+            )
+            step += 1
+            lg_host = np.asarray(logits[:, 0])  # ONE device sync per step
+            for slot in active:
+                i, req = slot.index, slot.request
+                slot.length += 1  # cur token entered the cache
+                lengths[i] += 1
+                tok = self._sample_one(
+                    lg_host[i], seed0, req.rid, slot.generated
+                )
+                emit(req, slot, tok, step)
+                if not maybe_finish(slot, tok, step):
+                    cur[i, 0] = tok
+
+        assert pool.num_free == pool.capacity, "leaked KV blocks"
+        return outs, sched.finished
+
+    def _sample_one(self, logits_row, seed0: int, rid: int,
+                    n: int) -> int:
+        """Per-request sampling from a HOST (numpy) logits row: greedy,
+        or Gumbel-max temperature sampling (== categorical in law)
+        seeded on (session seed, rid, token index) — host-only and
+        independent of slot placement and batch composition, so
+        staggered admission reproduces solo runs."""
+        if self.sc.temperature <= 0.0:
+            return int(logits_row.argmax())
+        g = np.random.default_rng((seed0, rid, n)).gumbel(
+            size=logits_row.shape
+        )
+        return int(
+            (logits_row / self.sc.temperature + g).argmax()
+        )

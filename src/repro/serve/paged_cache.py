@@ -1,0 +1,83 @@
+"""Host-side KV block pool: the allocator behind the paged serve cache.
+
+The device side is a per-layer global pool ``(num_blocks, block_size,
+Kh, dh)`` (``models/attention.init_paged_cache``); this module owns the
+*bookkeeping*: which blocks are free, which sequence owns which blocks.
+Blocks are allocated atomically on request admission and freed on
+completion — the continuous-batching engine never fragments a sequence's
+worst-case footprint across admissions, so an admitted request can
+always run to its token budget.
+
+Block 0 is the **trash block**: never allocated, written by free decode
+slots (their all-zero block-table rows point at it), never read.
+"""
+from __future__ import annotations
+
+TRASH_BLOCK = 0
+
+
+def bucket_len(prompt_len: int, block_size: int) -> int:
+    """Bucketed prefill length: prompts round up to whole blocks (one
+    jit specialization per bucket; prefill writes whole blocks). The
+    single source of truth shared by the allocator (``blocks_needed``)
+    and the engine's prefill padding — they must agree or prefill would
+    write blocks the allocator never reserved."""
+    return -(-max(prompt_len, 1) // block_size) * block_size
+
+
+def blocks_needed(prompt_len: int, max_new: int, block_size: int) -> int:
+    """Worst-case block footprint of a request: the bucketed prompt
+    plus its full token budget."""
+    bucket = bucket_len(prompt_len, block_size)
+    return -(-max(bucket, prompt_len + max_new) // block_size)
+
+
+class BlockPool:
+    """LIFO free-list allocator over the global KV block pool.
+
+    LIFO keeps recently freed (cache-warm on real hardware) blocks hot,
+    and makes the accounting trivially checkable: ``num_free`` must
+    return to ``num_blocks - 1`` when the engine drains.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                "BlockPool needs >= 2 blocks (block 0 is the reserved "
+                f"trash block); got {num_blocks}"
+            )
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the trash block)."""
+        return self.num_blocks - 1
+
+    def alloc(self, n: int):
+        """Atomically take ``n`` blocks; returns their ids, or None if
+        the pool cannot satisfy the request right now (the scheduler
+        defers admission — never partial allocations)."""
+        if n <= 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(
+                    f"double free / foreign block {b} (allocated: "
+                    f"{sorted(self._allocated)})"
+                )
+            self._allocated.remove(b)
+            self._free.append(b)

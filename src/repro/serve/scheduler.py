@@ -1,0 +1,161 @@
+"""Continuous-batching scheduler: slots, FCFS admission, eviction.
+
+Pure host-side bookkeeping (no jax) so the policy is unit-testable in
+isolation. The clock is the engine's decode-step counter: one tick per
+batched decode step, request arrivals are expressed in ticks.
+
+Slot lifecycle::
+
+    FREE --admit (queue head arrived, slot free, blocks available)-->
+    ACTIVE --finish (EOS / token budget / max_len)--> FREE
+
+Admission is strict FCFS in ARRIVAL order (submission order breaks
+ties): if the earliest-arrived waiting request cannot be admitted (no
+free slot, or the pool cannot cover its worst-case block footprint),
+nothing behind it is — keeping per-request latency predictable instead
+of starving large requests behind a stream of small ones.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Optional
+
+from repro.serve.paged_cache import BlockPool, blocks_needed
+
+FREE = "free"
+ACTIVE = "active"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    arrival: int = 0  # decode-step tick the request becomes visible
+    # Streaming callback: called as on_token(rid, token) per new token.
+    on_token: Optional[Callable[[int, int], None]] = None
+
+
+@dataclasses.dataclass
+class Slot:
+    index: int
+    state: str = FREE
+    request: Optional[Request] = None
+    blocks: tuple = ()
+    length: int = 0  # tokens currently in the slot's KV blocks
+    generated: int = 0  # new tokens emitted so far
+    budget: int = 0  # max new tokens (request.max_new clamped to max_len)
+    admitted_at: int = 0
+    first_token_at: int = 0
+
+
+class Scheduler:
+    """FCFS continuous-batching admission over a fixed slot array + the
+    shared :class:`BlockPool`."""
+
+    def __init__(self, max_batch: int, pool: BlockPool, max_len: int):
+        self.pool = pool
+        self.max_len = max_len
+        self.slots = [Slot(index=i) for i in range(max_batch)]
+        # Arrival-ordered wait queue: (arrival, submission seq, Request).
+        self.queue: list[tuple[int, int, Request]] = []
+        self._seq = 0
+        self._rids: set[int] = set()
+        self.finished: dict[int, dict] = {}
+
+    # -- submission -----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        plen = len(req.prompt)
+        if req.rid in self._rids:
+            raise ValueError(
+                f"duplicate request id {req.rid}: outputs and stats are "
+                "keyed by rid"
+            )
+        if plen == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new must be >= 1 (the first "
+                "token is sampled from the prefill logits)"
+            )
+        if plen >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({plen}) >= max_len "
+                f"({self.max_len})"
+            )
+        budget = min(req.max_new, self.max_len - plen)
+        need = blocks_needed(plen, budget, self.pool.block_size)
+        if need > self.pool.capacity:
+            raise ValueError(
+                f"request {req.rid}: needs {need} KV blocks, pool holds "
+                f"{self.pool.capacity} — raise num_blocks or max_len"
+            )
+        self._rids.add(req.rid)
+        bisect.insort(self.queue, (req.arrival, self._seq, req))
+        self._seq += 1
+
+    # -- admission ------------------------------------------------------
+    def admit(self, now: int) -> list[Slot]:
+        """Admit queued requests (FCFS) into free slots while blocks
+        last. Returns the slots to prefill; block tables/pool state are
+        the engine's to apply."""
+        out = []
+        while self.queue and self.queue[0][0] <= now:
+            slot = next(
+                (s for s in self.slots if s.state == FREE), None
+            )
+            if slot is None:
+                break
+            req = self.queue[0][2]
+            plen = len(req.prompt)
+            budget = min(req.max_new, self.max_len - plen)
+            blocks = self.pool.alloc(
+                blocks_needed(plen, budget, self.pool.block_size)
+            )
+            if blocks is None:
+                break  # strict FCFS: nothing overtakes the queue head
+            self.queue.pop(0)
+            slot.state = ACTIVE
+            slot.request = req
+            slot.blocks = tuple(blocks)
+            slot.length = 0
+            slot.generated = 0
+            slot.budget = budget
+            slot.admitted_at = now
+            out.append(slot)
+        return out
+
+    # -- completion -----------------------------------------------------
+    def finish(self, slot: Slot, now: int, reason: str) -> None:
+        req = slot.request
+        self.pool.free(slot.blocks)
+        self.finished[req.rid] = {
+            "arrival": req.arrival,
+            "admitted_at": slot.admitted_at,
+            "first_token_at": slot.first_token_at,
+            "finished_at": now,
+            "generated": slot.generated,
+            "reason": reason,
+        }
+        slot.state = FREE
+        slot.request = None
+        slot.blocks = ()
+        slot.length = 0
+        slot.generated = 0
+        slot.budget = 0
+
+    # -- queries --------------------------------------------------------
+    @property
+    def active(self) -> list[Slot]:
+        return [s for s in self.slots if s.state == ACTIVE]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            s.state == ACTIVE for s in self.slots
+        )
+
+    def next_arrival(self) -> Optional[int]:
+        return self.queue[0][0] if self.queue else None

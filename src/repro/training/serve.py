@@ -1,100 +1,8 @@
-"""Batched serving engine: prefill + decode with a static batch.
-
-``ServeEngine`` packs requests into a fixed-size batch, runs one jitted
-prefill over the (right-padded) prompts and then steps the decode loop.
-Upcycled MoE models serve through the exact same path — Top-K routing in
-decode groups the live batch's tokens (paper §3.1: this is why the
-decoder uses token-choice routing; Expert Choice would leak batch
-composition into each token's output).
+"""Back-compat shim: the serving engine moved to the ``repro.serve``
+package (paged KV cache + continuous batching). Existing imports —
+``from repro.training.serve import ServeConfig, ServeEngine`` — keep
+working; new code should import from ``repro.serve``.
 """
-from __future__ import annotations
+from repro.serve import Request, ServeConfig, ServeEngine  # noqa: F401
 
-import dataclasses
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ArchConfig
-from repro.models import model_zoo as zoo
-from repro.sharding import ShardCtx
-
-
-@dataclasses.dataclass
-class ServeConfig:
-    max_batch: int = 8
-    max_len: int = 256
-    temperature: float = 0.0  # 0 => greedy
-    cache_dtype: str = "float32"
-
-
-class ServeEngine:
-    def __init__(
-        self,
-        params,
-        cfg: ArchConfig,
-        sc: Optional[ServeConfig] = None,
-        *,
-        ac: zoo.ApplyCfg = zoo.ApplyCfg(),
-        ctx: Optional[ShardCtx] = None,
-    ):
-        # sc defaults to None, NOT ServeConfig(): a dataclass default
-        # would be one shared mutable instance across every engine.
-        # (ApplyCfg is frozen, so its shared default is harmless.)
-        sc = ServeConfig() if sc is None else sc
-        self.params, self.cfg, self.sc, self.ac, self.ctx = (
-            params, cfg, sc, ac, ctx
-        )
-        cdtype = jnp.bfloat16 if sc.cache_dtype == "bfloat16" else jnp.float32
-
-        def _prefill(params, tokens, cache):
-            return zoo.prefill(
-                params, {"tokens": tokens}, cache, cfg, ac=ac, ctx=ctx
-            )
-
-        def _step(params, tokens, cache, index):
-            return zoo.decode_step(
-                params, tokens, cache, index, cfg, ac=ac, ctx=ctx
-            )
-
-        self._prefill = jax.jit(_prefill)
-        self._step = jax.jit(_step, donate_argnums=(2,))
-        self._cache_dtype = cdtype
-
-    def generate(self, prompts: list[list[int]], max_new: int = 32,
-                 *, rng=None) -> list[list[int]]:
-        """Greedy/temperature generation for a batch of prompts."""
-        sc, cfg = self.sc, self.cfg
-        B = len(prompts)
-        assert B <= sc.max_batch
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((B, plen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p  # right padding handled by causality
-        cache = zoo.init_serve_cache(
-            cfg, B, plen + max_new, dtype=self._cache_dtype
-        )
-        cache, logits = self._prefill(self.params, jnp.asarray(toks), cache)
-        out = [list(p) for p in prompts]
-        index = jnp.asarray(plen, jnp.int32)
-        rng = jax.random.PRNGKey(0) if rng is None else rng
-        cur = self._sample(logits, rng)
-        for t in range(max_new):
-            for i in range(B):
-                out[i].append(int(cur[i, 0]))
-            if t == max_new - 1:
-                break
-            cache, logits = self._step(self.params, cur, cache, index)
-            index = index + 1
-            rng = jax.random.fold_in(rng, t)
-            cur = self._sample(logits, rng)
-        return out
-
-    def _sample(self, logits, rng):
-        lg = logits[:, -1]
-        if self.sc.temperature <= 0.0:
-            return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
-        return jax.random.categorical(
-            rng, lg / self.sc.temperature
-        )[:, None].astype(jnp.int32)
+__all__ = ["Request", "ServeConfig", "ServeEngine"]
