@@ -14,6 +14,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import timed
 from repro.kernels import ops
@@ -250,6 +251,63 @@ def run() -> list[tuple[str, float, str]]:
     rows.append((
         "kernels/flash_attention_pallas_interpret_fwd_bwd", us_agp,
         "custom_vjp_kernels=dq+dkv",
+    ))
+
+    # Chunked paged prefill vs the per-token decode walk: one C-token
+    # chunk through ops.prefill_attention against C sequential
+    # ops.decode_attention steps over the same block-table KV (the
+    # serving mixed step's prefill lane vs prefilling through the
+    # decode kernel). XLA-path wall time; the Pallas kernels run in
+    # interpret mode for a correctness-path timing only — DMA-elision
+    # and MXU-utilization numbers remain TPU-validation items.
+    Bc, Cc, Hc, Khc, dhc = (1, 8, 4, 2, 16) if SMOKE else (1, 16, 8, 2, 32)
+    bsp, nbp = 8, 8
+    Pp = 1 + nbp
+    ks = jax.random.split(key, 3)
+    qc = jax.random.normal(ks[0], (Bc, Cc, Hc, dhc), jnp.float32)
+    kpool = jax.random.normal(ks[1], (Pp, bsp, Khc, dhc), jnp.float32)
+    vpool = jax.random.normal(ks[2], (Pp, bsp, Khc, dhc), jnp.float32)
+    btp = jnp.arange(1, Pp, dtype=jnp.int32)[None, :]
+    start0 = 3 * bsp  # chunk attends prior blocks + itself
+
+    fp = jax.jit(lambda q: ops.prefill_attention(
+        q, kpool, vpool, btp, jnp.asarray([start0]), jnp.asarray([Cc])))
+    us_pf = timed(fp, qc, n=reps)
+
+    fd = jax.jit(lambda q, ln: ops.decode_attention(
+        q, kpool, vpool, btp, ln))
+
+    def decode_walk(q):
+        for i in range(Cc):
+            fd(q[:, i:i + 1],
+               jnp.asarray([start0 + i + 1])).block_until_ready()
+
+    # Same warmup + median discipline as timed() so the two columns of
+    # this row are comparable.
+    import time as _time
+
+    for _ in range(3):
+        decode_walk(qc)
+    ts = []
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        decode_walk(qc)
+        ts.append(_time.perf_counter() - t0)
+    us_dw = float(np.median(ts)) * 1e6
+    rows.append((
+        "kernels/paged_prefill_chunk_vs_decode_walk", us_pf,
+        f"chunk_us={us_pf:.0f} decode_walk_us={us_dw:.0f} "
+        f"speedup={us_dw / us_pf:.2f}x chunk_len={Cc} "
+        f"context_blocks={start0 // bsp}",
+    ))
+
+    fpp = jax.jit(lambda q: ops.prefill_attention(
+        q, kpool, vpool, btp, jnp.asarray([start0]), jnp.asarray([Cc]),
+        implementation="pallas"))
+    us_ppf = timed(fpp, qc, n=2)
+    rows.append((
+        "kernels/paged_prefill_pallas_interpret", us_ppf,
+        "q_tile_x_kv_block_walk=scalar_prefetch online_softmax=causal_abs",
     ))
 
     # rwkv6: chunked-parallel vs sequential scan

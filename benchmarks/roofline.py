@@ -188,6 +188,45 @@ def kernel_rooflines() -> list[tuple[str, float, str]]:
         f"bf16_bytes={dec_by:.3e} f32_bytes={dec_by_f32:.3e} "
         f"ratio={dec_by / dec_by_f32:.2f}",
     ))
+    # Paged prefill-attention (kernels/paged_prefill.py) at a serving
+    # shape: one 256-token chunk of a request with 1024 tokens already
+    # cached (prefix blocks + earlier chunks), GQA 16/2, dh=128, bs=16.
+    # Two claims: (1) the q-tile x kv-block walk amortizes the table
+    # walk — decoding the same 256 tokens one step at a time would
+    # re-stream each token's whole live prefix (the chunked_vs_decode
+    # bytes ratio); (2) arithmetic intensity scales with the q tile
+    # (bq*G rows per kv byte), so chunks run MXU-bound where decode is
+    # HBM-bound. Dead-step fetch elision (blocks past a q tile's causal
+    # limit) is modeled here and in tiling.paged_prefill_fwd_bytes;
+    # measuring the elided DMAs needs real hardware — a TPU-validation
+    # item, like the decode kernel's.
+    from repro.kernels.tiling import (
+        paged_prefill_flops,
+        paged_prefill_fwd_bytes,
+    )
+
+    cstart, clen, cbq = 1024, 256, 128
+    pf_fl = paged_prefill_flops(cstart, clen, Hd, dhd)
+    pf_by = paged_prefill_fwd_bytes(
+        cstart, clen, cbq, bsd, Khd, dhd, n_heads=Hd
+    )
+    rows.append(_roofline_row(
+        "roofline/kernel.paged_prefill.fwd", pf_fl, pf_by
+    ))
+    dec_walk_by = sum(
+        paged_decode_fwd_bytes([cstart + i + 1], bsd, Khd, dhd,
+                               n_heads=Hd)
+        for i in range(clen)
+    )
+    rows.append((
+        "roofline/kernel.paged_prefill.chunked_vs_decode",
+        0.0,
+        f"chunk_bytes={pf_by:.3e} per_token_decode_bytes="
+        f"{dec_walk_by:.3e} bytes_ratio={pf_by / dec_walk_by:.2f} "
+        f"chunk_len={clen} context={cstart} q_tile={cbq} "
+        "(prefilling via the decode walk re-streams the whole live "
+        "prefix per token; the chunk kernel pays it once per q tile)",
+    ))
     B, H, Sq, dh = 8, 16, 4096, 128
     bq = 512  # flash_attention.py default
     nq = Sq // bq

@@ -1,18 +1,28 @@
 # Serving benchmark: static-batch vs continuous-batching engines under a
-# Poisson arrival trace with heterogeneous prompt/output lengths.
+# Poisson arrival trace with heterogeneous prompt/output lengths, plus a
+# LONG-PROMPT BURSTY-ARRIVAL scenario comparing the three admission
+# models (static batch / prefill-on-join / chunked mixed step).
 #
-# Both engines serve the same trace on the same model. The static engine
+# All engines serve the same trace on the same model. The static engine
 # forms FCFS batches of whatever has arrived and decodes every batch
 # member for the batch max_new (the pre-PR serving model: finished
 # requests occupy slots until the longest one drains; late arrivals wait
-# out the whole batch). The continuous engine evicts finished sequences
-# and admits queued requests mid-flight into their paged KV blocks.
+# out the whole batch). The continuous engines evict finished sequences
+# and admit queued requests mid-flight into their paged KV blocks —
+# "prefill_on_join" pays a separate bucketed B=1 forward per admission
+# (stalling every in-flight decode and minting a jit signature per
+# prompt bucket), "chunked" folds prefill chunks into the one jitted
+# mixed step and reuses shared prompt prefixes through the block-level
+# prefix cache.
 #
 # Reported per engine: wall-clock decode throughput over USEFUL tokens
-# (requested tokens, not slot-steps burned) and p50/p99 request latency
-# in decode-step units (deterministic — independent of host timer
-# noise). SMOKE mode (REPRO_BENCH_SMOKE=1) shrinks the trace, same code
-# paths.
+# (requested tokens, not slot-steps burned), p50/p99 request latency in
+# decode-step units (deterministic — independent of host timer noise)
+# and, for the bursty scenario, WALL-clock p50/p99 TTFT (tick-unit TTFT
+# would hide that a prefill-on-join admission tick costs a full prompt
+# forward), decode-stall ticks and the prefix-cache hit rate. SMOKE mode
+# (REPRO_BENCH_SMOKE=1) shrinks the traces, same code paths.
+import bisect
 import dataclasses
 import os
 import time
@@ -113,6 +123,183 @@ def _run_continuous(eng, trace):
     return wall, useful, lats
 
 
+def _trace_bursty(n_bursts, rng):
+    """Long-prompt bursty arrivals: Poisson bursts of 4-6 requests (at
+    ~2 arrivals/tick inside a burst), all sharing a long common prompt
+    prefix (the system-prompt workload the prefix cache exists for)
+    plus a unique suffix — prompt length >> block size, so prefill
+    really is multi-block/multi-chunk work. A single cache-warming
+    request sees the prefix once before the bursts (steady-state
+    serving: the system prompt is not new), and responses are short —
+    the admission-dominated regime bursty traffic creates."""
+    prefix_len = 64 if SMOKE else 96
+    prefix = list(rng.integers(1, 250, size=prefix_len))
+    reqs = [{"rid": 0, "arrival": 0, "prompt": prefix + [5],
+             "max_new": 2}]
+    t, rid = 6, 1
+    for _ in range(n_bursts):
+        t += 1 + int(rng.exponential(6))
+        for j in range(int(rng.integers(4, 7))):
+            suffix = list(
+                rng.integers(1, 250, size=int(rng.integers(4, 11)))
+            )
+            reqs.append({
+                "rid": rid,
+                "arrival": t + j // 2,
+                "prompt": prefix + suffix,
+                "max_new": int(rng.integers(3, 9) if SMOKE
+                               else rng.integers(4, 13)),
+            })
+            rid += 1
+    return reqs
+
+
+def _run_static_wall(eng, trace, max_batch):
+    """Static FCFS batching with WALL-clock TTFT: generate() streams
+    nothing, so a request's first token arrives when its whole batch
+    drains — that IS the static engine's TTFT."""
+    queue = sorted(trace, key=lambda r: (r["arrival"], r["rid"]))
+    clock, wall, useful = 0, 0.0, 0
+    visible, ttft = {}, {}
+    while queue:
+        now_w = time.perf_counter()
+        for r in queue:
+            if r["arrival"] <= clock and r["rid"] not in visible:
+                visible[r["rid"]] = now_w
+        avail = [r for r in queue if r["arrival"] <= clock]
+        if not avail:
+            clock = queue[0]["arrival"]
+            continue
+        batch = avail[:max_batch]
+        queue = [r for r in queue if r not in batch]
+        mx = max(r["max_new"] for r in batch)
+        t0 = time.perf_counter()
+        eng.generate([r["prompt"] for r in batch], max_new=mx)
+        t1 = time.perf_counter()
+        wall += t1 - t0
+        useful += sum(r["max_new"] for r in batch)
+        clock += mx
+        for r in batch:
+            ttft[r["rid"]] = (t1 - visible[r["rid"]]) * 1e3
+    return wall, useful, [ttft[r["rid"]] for r in trace]
+
+
+def _run_paged_wall(eng, trace):
+    """Continuous engine (either admission mode) with wall-clock TTFT:
+    first-token wall stamp from the streaming callback minus the wall
+    stamp of the first engine tick at/after the request's arrival."""
+    from repro.serve import Request
+
+    first_tok = {}
+
+    def on_token(rid, tok):
+        if rid not in first_tok:
+            first_tok[rid] = time.perf_counter()
+
+    reqs = [
+        Request(rid=r["rid"], prompt=list(r["prompt"]),
+                max_new=r["max_new"], arrival=r["arrival"])
+        for r in trace
+    ]
+    t0 = time.perf_counter()
+    outs, stats = eng.serve(reqs, on_token=on_token)
+    wall = time.perf_counter() - t0
+    tick_wall = eng.last_stats["tick_wall"]
+    ticks = sorted(tick_wall)
+    ttfts = []
+    for r in trace:
+        i = bisect.bisect_left(ticks, r["arrival"])
+        visible = tick_wall[ticks[min(i, len(ticks) - 1)]]
+        ttfts.append((first_tok[r["rid"]] - visible) * 1e3)
+    useful = sum(s["generated"] for s in stats.values())
+    return wall, useful, ttfts, dict(eng.last_stats)
+
+
+def run_bursty() -> list[tuple[str, float, str]]:
+    """static vs prefill-on-join vs chunked on the long-prompt bursty
+    trace — the scenario the mixed step + prefix cache exist for."""
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg, vals = _build()
+    max_batch = 6
+    max_len = 96 if SMOKE else 160
+    nb_slot = -(-max_len // 8)
+    # Block headroom beyond the slots' worst case so cached-free prefix
+    # blocks survive between bursts instead of being evicted.
+    num_blocks = 1 + max_batch * nb_slot + 2 * (max_len // 8)
+    n_bursts = 6 if SMOKE else 10
+    trace = _trace_bursty(n_bursts, np.random.default_rng(7))
+
+    static_eng = ServeEngine(
+        vals, cfg, ServeConfig(max_batch=max_batch, max_len=max_len)
+    )
+    poj_eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=max_batch, max_len=max_len, paged=True,
+                    block_size=8, num_blocks=num_blocks,
+                    admission="prefill_on_join"),
+    )
+    chunk_eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=max_batch, max_len=max_len, paged=True,
+                    block_size=8, num_blocks=num_blocks,
+                    chunk_size=16, chunks_per_step=2),
+    )
+
+    # warm all engines on the full trace once (jit compiles — the
+    # prefill-on-join engine's per-bucket prefill zoo included), then
+    # best of two/three measured passes (CPU timer noise at smoke scale
+    # is comparable to the engines' gap).
+    _run_static_wall(static_eng, trace, max_batch)
+    _run_paged_wall(poj_eng, trace)
+    _run_paged_wall(chunk_eng, trace)
+    s_wall, s_useful, s_ttft = min(
+        (_run_static_wall(static_eng, trace, max_batch)
+         for _ in range(2)),
+        key=lambda r: r[0],
+    )
+    p_wall, p_useful, p_ttft, p_stats = min(
+        (_run_paged_wall(poj_eng, trace) for _ in range(3)),
+        key=lambda r: r[0],
+    )
+    c_wall, c_useful, c_ttft, c_stats = min(
+        (_run_paged_wall(chunk_eng, trace) for _ in range(3)),
+        key=lambda r: r[0],
+    )
+
+    def row(name, wall, useful, ttfts, extra=""):
+        tps = useful / wall if wall else 0.0
+        return (
+            f"serve/bursty_{name}",
+            wall / max(useful, 1) * 1e6,
+            f"tokens_per_s={tps:.1f} useful_tokens={useful} "
+            f"p50_ttft_ms={np.percentile(ttfts, 50):.1f} "
+            f"p99_ttft_ms={np.percentile(ttfts, 99):.1f}" + extra,
+        )
+
+    return [
+        row("static", s_wall, s_useful, s_ttft,
+            " (TTFT = batch drain: generate() does not stream)"),
+        row("prefill_on_join", p_wall, p_useful, p_ttft,
+            f" decode_stall_ticks={p_stats['decode_stall_ticks']} "
+            f"compile_count={p_stats['compile_count']}"),
+        row("chunked", c_wall, c_useful, c_ttft,
+            f" decode_stall_ticks={c_stats['decode_stall_ticks']} "
+            f"compile_count={c_stats['compile_count']} "
+            f"prefix_hit_frac={c_stats['prefix_hit_frac']:.2f}"),
+        (
+            "serve/bursty_chunked_vs_prefill_on_join",
+            0.0,
+            f"tokens_per_s_speedup="
+            f"{(c_useful / c_wall) / (p_useful / p_wall):.2f}x "
+            f"p99_ttft_ratio="
+            f"{np.percentile(p_ttft, 99) / max(np.percentile(c_ttft, 99), 1e-9):.2f}x "
+            f"prefix_hit_frac={c_stats['prefix_hit_frac']:.2f} "
+            "(>1x = chunked wins both)",
+        ),
+    ]
+
+
 def run() -> list[tuple[str, float, str]]:
     from repro.serve import ServeConfig, ServeEngine
 
@@ -127,8 +314,11 @@ def run() -> list[tuple[str, float, str]]:
     )
     cont_eng = ServeEngine(
         vals, cfg,
+        # Short-prompt trace: size the chunk lane to the prompts (one
+        # 8-token lane) so the mixed step's standing token budget is
+        # not dominated by idle chunk rows.
         ServeConfig(max_batch=max_batch, max_len=max_len, paged=True,
-                    block_size=8),
+                    block_size=8, chunk_size=8, chunks_per_step=1),
     )
 
     # warm both engines on the full trace once (jit compiles: per-shape
@@ -171,4 +361,5 @@ def run() -> list[tuple[str, float, str]]:
             "useful tokens)",
         ),
     ]
+    rows.extend(run_bursty())
     return rows

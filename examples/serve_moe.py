@@ -7,9 +7,11 @@ Builds a small upcycled model, then serves prompts through the
 ServeEngine. Default mode demonstrates the static batch (Top-K decode
 routing per paper §3.1, KV-cache decode, greedy + temperature sampling);
 ``--paged`` demonstrates the production path: paged KV cache, staggered
-request arrivals admitted mid-flight, per-token streaming, and
-early-finish eviction freeing KV blocks for the queue. Decode runs
-dropless (capacity >= experts) so continuous batching is
+request arrivals admitted mid-flight through the chunked MIXED step
+(decode rows + prefill chunk lanes in one jitted call per tick, shared
+prompt prefixes served from the block-level prefix cache), per-token
+streaming, and early-finish eviction freeing KV blocks for the queue.
+Decode runs dropless (capacity >= experts) so continuous batching is
 output-identical to serving each request alone.
 """
 import argparse
@@ -44,6 +46,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true")
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--stream", action="store_true")
     args = ap.parse_args()
     params, sparse_cfg = build()
@@ -53,25 +56,39 @@ def main():
         eng = ServeEngine(
             params, sparse_cfg,
             ServeConfig(max_batch=2, max_len=128, paged=True,
-                        block_size=args.block_size),
+                        block_size=args.block_size,
+                        chunk_size=args.chunk_size),
         )
-        # 4 requests through 2 slots: rid 2/3 queue and are admitted
-        # mid-flight as earlier requests finish and free their blocks.
+        # 5 requests through 2 slots: later arrivals queue and are
+        # admitted mid-flight as earlier requests finish and free their
+        # blocks; rid 4 repeats rid 3's prompt prefix AFTER rid 3's
+        # blocks are registered, so its full prefix blocks come from
+        # the prefix cache instead of being recomputed (prefix_hit > 0
+        # on its line below — rids 0-3 are first sightings and pay).
+        shared = prompts[0] + [11, 12, 13, 14, 15, 16, 17, 18]
         reqs = [
             Request(rid=i, prompt=p, max_new=6 + 3 * i, arrival=i)
-            for i, p in enumerate(prompts)
-        ]
+            for i, p in enumerate(prompts[:3])
+        ] + [Request(rid=3, prompt=shared + [21, 22], max_new=6,
+                     arrival=0),
+             Request(rid=4, prompt=shared + [31], max_new=6,
+                     arrival=8)]
         on_token = (
             (lambda rid, t: print(f"  req{rid} += {t}", flush=True))
             if args.stream else None
         )
         print("[serve] continuous batching, 2 slots, staggered arrivals:")
         outs, stats = eng.serve(reqs, on_token=on_token)
-        for i, p in enumerate(prompts):
-            s = stats[i]
-            print(f"  request {i}: prompt={p} -> {outs[i][len(p):]} "
+        for r in reqs:
+            s = stats[r.rid]
+            p = r.prompt
+            print(f"  request {r.rid}: prompt={p} -> {outs[r.rid][len(p):]} "
                   f"(arrived@{s['arrival']} admitted@{s['admitted_at']} "
-                  f"done@{s['finished_at']})")
+                  f"done@{s['finished_at']} prefix_hit={s['prefix_tokens']})")
+        es = eng.last_stats
+        print(f"  engine: {es['mixed_steps']} mixed steps, "
+              f"{es['compile_count']} compile(s), "
+              f"prefix_hit_frac={es['prefix_hit_frac']:.2f}")
         return
 
     eng = ServeEngine(

@@ -36,14 +36,19 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
-# sorted-dispatch path at capacity factors 1.0/1.25/2.0, and the
-# compacted block walk's dead-block byte-savings row); serve_bench runs
-# the continuous-batching vs static-batch comparison under a Poisson
-# arrival trace (the paged serve subsystem's tests themselves —
-# tests/test_paged_decode.py, tests/test_serve_paged.py — run in the
-# tier-1 pytest above); roofline keeps the static per-kernel FLOP/byte
-# models — ragged-bytes ratios, paged-vs-dense decode bytes, the EP-a2a
-# vs weight-gather comm crossover — importable and consistent.
+# sorted-dispatch path at capacity factors 1.0/1.25/2.0, the compacted
+# block walk's dead-block byte-savings row, and the chunked paged
+# prefill vs per-token decode-walk comparison); serve_bench runs the
+# continuous-batching vs static-batch comparison under a Poisson
+# arrival trace PLUS the long-prompt bursty scenario comparing static /
+# prefill-on-join / chunked-mixed-step admission (wall-clock TTFT,
+# decode stalls, prefix-cache hit rate; the paged serve subsystem's
+# tests themselves — tests/test_paged_decode.py, test_paged_prefill.py,
+# test_serve_paged.py, test_serve_chunked.py — run in the tier-1 pytest
+# above); roofline keeps the static per-kernel FLOP/byte models —
+# ragged-bytes ratios, paged-vs-dense decode bytes, paged-prefill
+# chunk-vs-decode-walk bytes, the EP-a2a vs weight-gather comm
+# crossover — importable and consistent.
 REPRO_BENCH_SMOKE=1 PYTHONPATH="$PYTHONPATH:." \
   python -m benchmarks.run --only kernels_micro,serve_bench,roofline
 

@@ -42,6 +42,13 @@ Serving-only: no VJP is registered (training-through-decode is a ROADMAP
 open item). The XLA oracle/fallback is ``ops.decode_attention(...,
 implementation="xla")`` — a pool gather + the dense masked-softmax
 ``models/attention._decode_attention``.
+
+This kernel serves the DECODE lane of the mixed serve step; the prefill
+chunk lanes run its multi-token sibling ``paged_prefill.py`` (same
+block-table walk, but a q-tile x kv-block grid that amortizes the walk
+over ``bq`` chunk rows — see ``benchmarks/kernels_micro.py
+paged_prefill_chunk_vs_decode_walk`` for why prefilling through the
+single-query walk would re-stream the whole live prefix per token).
 """
 from __future__ import annotations
 

@@ -185,6 +185,69 @@ def decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     return _decode_attention(q, k, v, lengths)
 
 
+def prefill_attention(q, k_pool, v_pool, block_tables, starts, lens, *,
+                      implementation="xla"):
+    """Paged chunked-prefill GQA attention over a block-pooled KV cache
+    — the prefill lane of the mixed serve step (repro/serve).
+
+    q: (NC, C, H, dh) — NC chunks of C consecutive prompt tokens, one
+    request each; k_pool/v_pool: (P, bs, Kh, dh) global KV block pools
+    with the chunk's own k/v ALREADY written (the mixed step writes both
+    lanes through one scatter before attention); block_tables: (NC, nb)
+    int32 pool block ids of each chunk's slot; starts: (NC,) int32
+    absolute position of q[c, 0]; lens: (NC,) int32 valid rows per chunk
+    (0 = dead chunk lane -> exact-zero output). Row i of chunk c attends
+    every pool position <= starts[c] + i (prefix blocks, earlier chunks
+    and the chunk itself — causal against absolute positions).
+
+    * ``pallas`` — scalar-prefetch q-tile x kv-block walk with online
+      softmax (kernels/paged_prefill.py; interpret mode on CPU). Reads
+      scale with the blocks each q tile attends, not ``nb``.
+    * ``xla`` / ``ref`` — gather each chunk's blocks into a dense
+      ``(NC, nb*bs, Kh, dh)`` view and run a masked softmax over
+      absolute positions: the production non-TPU fallback AND the
+      parity ground truth (tests/test_paged_prefill.py).
+
+    Serving-only: no VJP (same ROADMAP item as decode_attention).
+    """
+    implementation = _resolve(implementation)
+    if implementation == "pallas":
+        from repro.kernels import paged_prefill as pp
+
+        return pp.paged_prefill_attention_pallas(
+            q, k_pool, v_pool, block_tables, starts, lens,
+            interpret=INTERPRET_DEFAULT,
+        )
+    NC, C, H, dh = q.shape
+    bs, Kh = k_pool.shape[1], k_pool.shape[2]
+    nb = block_tables.shape[1]
+    G = H // Kh
+    k = k_pool[block_tables].reshape(NC, nb * bs, Kh, dh)
+    v = v_pool[block_tables].reshape(NC, nb * bs, Kh, dh)
+    qg = q.reshape(NC, C, Kh, G, dh)
+    s = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+    ) * dh ** -0.5
+    q_pos = starts[:, None] + jnp.arange(C)[None, :]          # (NC, C)
+    valid_q = jnp.arange(C)[None, :] < lens[:, None]
+    kv_pos = jnp.arange(nb * bs)
+    mask = (
+        valid_q[:, :, None]
+        & (kv_pos[None, None, :] <= q_pos[:, :, None])
+    )  # (NC, C, T)
+    s = jnp.where(mask[:, None, None], s, float("-inf"))
+    # Zero-valid-key-safe softmax (decode oracle discipline).
+    m = s.max(axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask[:, None, None], jnp.exp(s - m_safe), 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    y = jnp.einsum(
+        "bkgqt,btkd->bqkgd", p, v, preferred_element_type=jnp.float32
+    )
+    return y.reshape(NC, C, H, dh).astype(q.dtype)
+
+
 # One-time flag for the rwkv6 "auto" fallback warning below; tests reset
 # it to re-arm the warning.
 _RWKV6_AUTO_WARNED = False

@@ -147,6 +147,40 @@ def decode_attention_flops(lengths, n_heads: int, head_dim: int) -> int:
     return sum(4 * n_heads * int(n) * head_dim for n in lengths)
 
 
+def paged_prefill_fwd_bytes(
+    start: int, chunk_len: int, q_tile: int, block_size: int,
+    kv_heads: int, head_dim: int, *, n_heads: int, itemsize: int = 2,
+    q_itemsize: int = 4,
+) -> int:
+    """Modeled HBM bytes of ONE chunk through the paged prefill-attention
+    kernel (kernels/paged_prefill.py), shared by benchmarks/roofline.
+
+    Grid (Kh, nq, nb), block walk innermost: each q tile re-streams the
+    KV blocks it attends — blocks past the tile's causal limit
+    ``ceil((start + min((qi+1)*bq, len)) / bs)`` pin their windows to
+    the last needed block, so dead steps fetch nothing (the DMA-elision
+    claim stays a TPU-validation item; interpret mode cannot measure
+    it). Plus the chunk's q read and o write. Compare with
+    ``paged_decode_fwd_bytes``: decoding the same ``chunk_len`` tokens
+    one step at a time walks the table ``chunk_len`` times.
+    """
+    kv_rows = 0
+    for q0 in range(0, chunk_len, q_tile):
+        hi = min(q0 + q_tile, chunk_len)
+        kv_rows += -(-(start + hi) // block_size) * block_size
+    kv_bytes = 2 * kv_rows * kv_heads * head_dim * itemsize
+    qo_bytes = 2 * chunk_len * n_heads * head_dim * q_itemsize
+    return kv_bytes + qo_bytes
+
+
+def paged_prefill_flops(start: int, chunk_len: int, n_heads: int,
+                        head_dim: int) -> int:
+    """Chunk GQA attention FLOPs: row i attends start + i + 1 positions,
+    qk^T + pv = 4*H*dh per (query, key) pair."""
+    total_kv = sum(start + i + 1 for i in range(chunk_len))
+    return 4 * n_heads * head_dim * total_kv
+
+
 def attention_tile_vmem_bytes(bq: int, bk: int, dh: int) -> int:
     """Worst-case resident f32 bytes across the flash-attention kernels
     (fwd / dq / dkv). The dkv kernel dominates: q+do tiles, k/v tiles,

@@ -6,9 +6,14 @@ requests — static batch or paged continuous batching.
         [--paged] [--block-size 16] [--stream]
 
 ``--paged`` switches to the continuous-batching engine (paged KV cache,
-mid-flight admission/eviction, Pallas paged flash-decode on TPU);
-``--stream`` prints tokens as they are sampled instead of waiting for
-the full batch.
+mid-flight admission/eviction, Pallas paged attention kernels on TPU).
+Paged admission defaults to the chunked MIXED step (one jitted call per
+tick carrying decode rows + prefill chunk lanes, prefix caching across
+admissions); ``--admission prefill_on_join`` selects the pre-chunking
+per-admission prefill, ``--chunk-size`` / ``--chunks-per-step`` size
+the prefill token budget, ``--no-prefix-cache`` disables block-level
+prompt-prefix reuse. ``--stream`` prints tokens as they are sampled
+instead of waiting for the full batch.
 """
 from __future__ import annotations
 
@@ -29,6 +34,15 @@ def main() -> None:
                     help="continuous batching over a paged KV cache")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV tokens per pool block (--paged)")
+    ap.add_argument("--admission", default="chunked",
+                    choices=["chunked", "prefill_on_join"],
+                    help="paged admission path (chunked = mixed step)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prompt tokens per prefill chunk lane")
+    ap.add_argument("--chunks-per-step", type=int, default=1,
+                    help="prefill chunk lanes per mixed step")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable block-level prompt-prefix reuse")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated (--paged)")
     args = ap.parse_args()
@@ -55,7 +69,11 @@ def main() -> None:
         params, cfg,
         ServeConfig(max_batch=args.max_batch, max_len=256,
                     temperature=args.temperature,
-                    paged=args.paged, block_size=args.block_size),
+                    paged=args.paged, block_size=args.block_size,
+                    admission=args.admission,
+                    chunk_size=args.chunk_size,
+                    chunks_per_step=args.chunks_per_step,
+                    prefix_cache=not args.no_prefix_cache),
     )
     demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
     if args.paged:
@@ -74,7 +92,12 @@ def main() -> None:
             s = stats[i]
             print(f"[serve] req{i}: {p} -> {outs[i][len(p):]} "
                   f"(admitted@{s['admitted_at']} done@{s['finished_at']} "
-                  f"{s['reason']})")
+                  f"{s['reason']} prefix_hit={s['prefix_tokens']})")
+        es = eng.last_stats
+        print(f"[serve] engine: mode={es['mode']} "
+              f"steps={es['mixed_steps']} "
+              f"compile_count={es['compile_count']} "
+              f"prefix_hit_frac={es['prefix_hit_frac']:.2f}")
         return
     for i, seq in enumerate(eng.generate(demo, max_new=args.max_new)):
         print(f"[serve] req{i}: {demo[i]} -> {seq[len(demo[i]):]}")

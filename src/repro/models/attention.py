@@ -11,6 +11,7 @@ Shapes: q (B, Sq, H, dh); k, v (B, Skv, Kh, dh) with H % Kh == 0 (GQA).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -21,6 +22,27 @@ from repro.models import param as pm
 from repro.models.layers import rope
 
 NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedMeta:
+    """Lane layout of the fused decode + chunked-prefill serve step.
+
+    The mixed step's row batch is ``R = num_decode + num_chunks *
+    chunk_tokens`` single-token rows: rows ``[:num_decode]`` are the
+    decode lane (one per slot, position = tokens already cached — 0
+    marks a free/prefilling slot), the rest are ``num_chunks`` chunk
+    lanes of ``chunk_tokens`` consecutive prompt tokens each.
+    ``chunk_lens`` (NC,) counts the valid rows per chunk (0 = idle
+    lane). Per-row absolute positions travel as ``cache_index`` and
+    per-row block tables as ``block_tables`` — this object only adds
+    what cannot be derived from them.
+    """
+
+    num_decode: int
+    num_chunks: int
+    chunk_tokens: int
+    chunk_lens: jax.Array  # (num_chunks,) int32
 
 
 def attention_init(rng, cfg: ArchConfig, *, dtype=jnp.float32):
@@ -181,6 +203,7 @@ def attention_apply(
     pad_heads_multiple: int = 0,
     implementation: str = "xla",
     block_tables=None,
+    mixed: Optional[MixedMeta] = None,
 ):
     """Self- or cross-attention.
 
@@ -197,6 +220,15 @@ def attention_apply(
     ``ops.decode_attention`` (the Pallas paged flash-decode kernel when
     ``implementation="pallas"``, the gather + masked-softmax oracle on
     "xla").
+
+    mixed: None, or a :class:`MixedMeta` — the fused decode + chunked-
+    prefill step (``Sq == 1``, rows = decode slots then flattened
+    chunks). ``cache_index`` carries PER-ROW absolute positions and
+    ``block_tables`` per-row tables; all rows write k/v through ONE
+    scatter (``paged_row_write`` — dead rows land in the trash block),
+    then the decode lane reads via ``ops.decode_attention`` and the
+    chunk lanes via ``ops.prefill_attention`` (the q-tile x kv-block
+    paged prefill kernel on "pallas").
 
     implementation: "xla" | "pallas" | "ref" | "auto" — the flash-attention
     compute path (repro.kernels.ops.flash_attention). "pallas" is fully
@@ -266,6 +298,45 @@ def attention_apply(
     q_offset = 0
     kv_len = None
     paged = block_tables is not None and cache is not None and kv_x is None
+    if paged and mixed is not None:
+        from repro.kernels import ops
+
+        # Fused decode + chunked-prefill step: R = B_dec + NC*C rows.
+        B_dec, NC, C = (
+            mixed.num_decode, mixed.num_chunks, mixed.chunk_tokens
+        )
+        pool_k, pool_v = cache["k"], cache["v"]
+        positions = cache_index  # (R,) absolute write position per row
+        dec_live = positions[:B_dec] > 0
+        chunk_live = (
+            jnp.arange(C)[None, :] < mixed.chunk_lens[:, None]
+        )  # (NC, C)
+        live = jnp.concatenate([dec_live, chunk_live.reshape(-1)])
+        # ONE cache-write path for both lanes: a single per-row scatter.
+        new_pk = paged_row_write(pool_k, k, block_tables, positions, live)
+        new_pv = paged_row_write(pool_v, v, block_tables, positions, live)
+        cache = {"k": new_pk, "v": new_pv}
+        # Decode lane: live slots attend their freshly written token too.
+        y_dec = ops.decode_attention(
+            q[:B_dec], new_pk, new_pv, block_tables[:B_dec],
+            positions[:B_dec] + dec_live,
+            implementation=implementation,
+        )
+        # Chunk lanes: rows attend every pool position <= their own —
+        # prefix blocks, earlier chunks and the chunk itself (written
+        # above) are all just block reads.
+        qc = q[B_dec:, 0].reshape(NC, C, *q.shape[2:])
+        ctab = block_tables[B_dec:].reshape(NC, C, -1)[:, 0]
+        cstart = positions[B_dec:].reshape(NC, C)[:, 0]
+        y_ch = ops.prefill_attention(
+            qc, new_pk, new_pv, ctab, cstart, mixed.chunk_lens,
+            implementation=implementation,
+        )
+        y = jnp.concatenate(
+            [y_dec, y_ch.reshape(NC * C, 1, *y_ch.shape[2:])], axis=0
+        )
+        out = jnp.einsum("bshk,hkd->bsd", y, wo)
+        return out, cache
     if paged:
         pool_k, pool_v = cache["k"], cache["v"]
         if Sq > 1:
@@ -434,6 +505,30 @@ def paged_decode_write(pool, kv, block_tables, lengths):
     blk = lengths // bs
     off = lengths % bs
     bids = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    flat = pool.reshape(P * bs, *pool.shape[2:])
+    flat = flat.at[bids * bs + off].set(kv[:, 0].astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_row_write(pool, kv, row_tables, positions, live):
+    """Scatter one token per ROW into the pool at its absolute position
+    — the single cache-write path of the mixed serve step (decode rows
+    AND chunk rows go through this one scatter).
+
+    pool: (P, bs, Kh, dh); kv: (R, 1, Kh, dh); row_tables: (R, nb) each
+    row's slot block table; positions: (R,) absolute token position to
+    write; live: (R,) bool — dead rows (free slots, padded chunk rows,
+    idle chunk lanes) land in trash block 0, which is never read.
+    Positions are clamped into the table so padded rows whose nominal
+    position runs past the slot's allocation stay in bounds (they are
+    dead and routed to trash anyway).
+    """
+    P, bs = pool.shape[:2]
+    nb = row_tables.shape[1]
+    blk = jnp.clip(positions // bs, 0, nb - 1)
+    bids = jnp.take_along_axis(row_tables, blk[:, None], axis=1)[:, 0]
+    bids = jnp.where(live, bids, 0)
+    off = jnp.where(live, positions % bs, 0)
     flat = pool.reshape(P * bs, *pool.shape[2:])
     flat = flat.at[bids * bs + off].set(kv[:, 0].astype(pool.dtype))
     return flat.reshape(pool.shape)

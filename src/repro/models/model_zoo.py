@@ -477,6 +477,111 @@ def paged_decode_step(
     return new_cache, logits
 
 
+def paged_mixed_step(
+    params,
+    dec_tokens,
+    chunk_tokens,
+    cache,
+    dec_tables,
+    dec_lengths,
+    chunk_tables,
+    chunk_starts,
+    chunk_lens,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """One fused continuous-batching step: the decode batch AND the
+    pending prefill chunks through a SINGLE forward (one jit signature
+    per engine — no per-admission B=1 prefill, no bucketed-length
+    compile zoo).
+
+    dec_tokens: (B, 1) current token per decode slot; dec_lengths: (B,)
+    tokens already cached (0 = slot free or still prefilling -> masked
+    out of routing, write lands in the trash block); dec_tables: (B, nb)
+    — rows of non-decoding slots must be zeroed by the engine.
+    chunk_tokens: (NC, C) — NC chunk lanes of C consecutive prompt
+    tokens each; chunk_tables: (NC, nb) the owning slot's block table;
+    chunk_starts: (NC,) absolute position of the chunk's first token;
+    chunk_lens: (NC,) valid tokens in the lane (0 = idle lane).
+
+    The row batch is R = B + NC*C single-token rows. All rows write
+    their k/v through one paged scatter; decode rows read via the paged
+    flash-decode kernel, chunk rows via the paged prefill kernel
+    (models/attention mixed mode). MoE routes with dead rows masked, so
+    expert FLOPs track live tokens: decode rows ride the live-token
+    sorted dispatch, chunk rows keep expert work dense.
+
+    Returns ``(cache, logits (B + NC, V))``: rows [:B] are the decode
+    slots' next-token logits, rows [B:] each chunk lane's logits at its
+    LAST valid row — the engine samples a request's first token from
+    them when a chunk completes the prompt. One array so the engine
+    pays ONE host sync per mixed step.
+    """
+    ac = ac.resolve()
+    params = _cast_params(params, ac.cdtype)
+    B = dec_tokens.shape[0]
+    NC, C = chunk_tokens.shape
+    dec_lengths = dec_lengths.astype(jnp.int32)
+    chunk_starts = chunk_starts.astype(jnp.int32)
+    chunk_lens = chunk_lens.astype(jnp.int32)
+    dec_live = dec_lengths > 0
+    chunk_live = jnp.arange(C)[None, :] < chunk_lens[:, None]  # (NC, C)
+    tokens = jnp.concatenate(
+        [dec_tokens.reshape(B), chunk_tokens.reshape(NC * C)]
+    )[:, None].astype(jnp.int32)  # (R, 1)
+    positions = jnp.concatenate([
+        dec_lengths,
+        (chunk_starts[:, None] + jnp.arange(C)[None, :]).reshape(NC * C),
+    ]).astype(jnp.int32)  # (R,)
+    row_tables = jnp.concatenate(
+        [dec_tables, jnp.repeat(chunk_tables, C, axis=0)], axis=0
+    ).astype(jnp.int32)  # (R, nb)
+    token_mask = jnp.concatenate(
+        [dec_live, chunk_live.reshape(NC * C)]
+    )[:, None]
+    from repro.models.attention import MixedMeta
+
+    x = embed_apply(
+        params["embed"], tokens, cfg, positions=positions[:, None]
+    ).astype(ac.cdtype)
+    x = act(ctx, x, "batch seq embed")
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        cache=cache["stack"], cache_index=positions,
+        block_tables=row_tables,
+        token_mask=token_mask,
+        mixed=MixedMeta(
+            num_decode=B, num_chunks=NC, chunk_tokens=C,
+            chunk_lens=chunk_lens,
+        ),
+        mode="decode", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat="none",
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    # Head only over the rows the engine samples: the B decode rows plus
+    # each chunk lane's last valid row (the TRUE last prompt position
+    # when the chunk completes a prompt).
+    d = x.shape[-1]
+    xd = x[:B, 0]
+    last = jnp.clip(chunk_lens - 1, 0, C - 1)
+    xc = x[B:, 0].reshape(NC, C, d)[jnp.arange(NC), last]
+    h = jnp.concatenate([xd, xc], axis=0)[:, None]  # (B + NC, 1, d)
+    h = norm_apply(params["final_norm"], h, cfg)
+    logits = head_apply(
+        params.get("head", {}), h, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits[:, 0]
+
+
 def serve_cache_axes(cfg: ArchConfig):
     descs = stk.layer_descs(cfg, stack="decoder")
     axes = {"stack": stk.stack_cache_axes(descs)}

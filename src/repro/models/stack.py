@@ -198,6 +198,7 @@ def layer_apply(
     ctx: Optional[ShardCtx] = None,
     block_tables=None,
     token_mask=None,
+    mixed=None,
 ):
     cache = cache or None
     mix_cache = cache.get("mixer") if cache else None
@@ -212,6 +213,7 @@ def layer_apply(
             pad_heads_multiple=pad_heads_multiple,
             implementation=attn_impl,
             block_tables=block_tables,
+            mixed=mixed,
         )
     elif desc.mixer == "mamba":
         y, mix_cache = ssm.mamba_apply(
@@ -405,6 +407,7 @@ def stack_apply(
     remat: str = "none",  # none | full | dots | moe
     block_tables=None,
     token_mask=None,
+    mixed=None,
 ):
     segs = find_segments(descs)
     totals = zero_metrics()
@@ -443,6 +446,7 @@ def stack_apply(
                     ctx=ctx,
                     block_tables=block_tables,
                     token_mask=token_mask,
+                    mixed=mixed,
                 )
                 mets = jax.tree.map(jnp.add, mets, m)
                 out_cache[f"pos{i}"] = c_new

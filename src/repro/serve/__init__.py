@@ -1,5 +1,6 @@
 """Production serving subsystem: continuous batching over a paged KV
-cache with a Pallas paged flash-decode kernel.
+cache with chunked-prefill mixed steps, prefix caching and Pallas paged
+attention kernels.
 
 The static-batch engine (now the ``paged=False`` path of
 :class:`ServeEngine`) allocates a dense ``(B, max_len, ...)`` KV cache
@@ -13,44 +14,77 @@ slots          fixed decode-batch positions (``max_batch`` of them);
                a slot is FREE or ACTIVE (one request), evicted the
                step its request finishes (scheduler.py)
 block pool     global per-layer KV tensors ``(num_blocks, block_size,
-               Kh, dh)`` + a host-side LIFO free list; block 0 is the
-               reserved trash block free slots write into
+               Kh, dh)`` + a host-side refcounted free list; block 0
+               is the reserved trash block dead rows write into
                (paged_cache.py, models/attention.init_paged_cache)
 block tables   per-slot ``(nb,)`` int32 maps slot positions ->
                pool blocks; allocated atomically on admission
-               (worst-case footprint), freed on completion
-scheduler      FCFS admission at decode-step granularity:
-               queue -> free slot + blocks -> prefill-on-join ->
+               (worst-case footprint), freed on completion — shared
+               prefix blocks survive until their LAST holder frees
+               them (refcounts)
+scheduler      FCFS admission at tick granularity: queue -> free
+               slot + blocks -> chunked prefill (FCFS chunk lanes,
+               decode-priority token budget, starvation-bounded) ->
                decode until EOS / token budget / max_len
-decode kernel  single-query GQA attention walking each slot's block
-               table via scalar prefetch, online softmax over ragged
-               lengths (kernels/decode_attention.py; XLA gather +
-               masked softmax as oracle/fallback via
-               ``ops.decode_attention``)
-MoE decode     slot batch routes through the sorted grouped-GEMM
-               dispatch with FREE slots masked out of routing, so
-               expert compute scales with live tokens
+mixed step     ONE jitted call per tick (zoo.paged_mixed_step):
+               ``max_batch`` decode rows + ``chunks_per_step`` prefill
+               chunk lanes of ``chunk_size`` prompt tokens, a single
+               compile signature (asserted via
+               ``last_stats["compile_count"]``) — admissions never
+               stall decodes and never mint new jit signatures.
+               ``admission="prefill_on_join"`` keeps the pre-chunking
+               per-admission B=1 prefill as the benchmark baseline
+cache writes   ONE scatter per step for both lanes
+               (models/attention.paged_row_write): every row writes
+               its k/v at its absolute position in its slot's blocks;
+               dead rows (free slots, idle lanes, padded chunk rows)
+               land in the trash block
+prefix cache   full prompt blocks indexed by content-chain hash
+               (content + absolute position); admissions sharing a
+               prompt prefix map them copy-free and skip their
+               chunks; copy-on-write ONLY for the partial tail block
+               (device-side block copy into the request's own
+               block); freed blocks stay matchable until reallocated
+               (paged_cache.py, ``prefix_hit_frac`` in engine stats)
+attn kernels   decode rows: single-query block-table walk
+               (kernels/decode_attention.py); chunk rows: q-tile x
+               kv-block walk with causal masking against absolute
+               positions (kernels/paged_prefill.py); XLA gather +
+               masked-softmax oracles via ``ops.decode_attention`` /
+               ``ops.prefill_attention``
+MoE            dead rows masked out of routing entirely — expert
+               FLOPs track live tokens; decode rows ride the sorted
+               ragged dispatch, prefill chunks keep expert work dense
 =============  =====================================================
 
 Request lifecycle::
 
     submit -> queued -> [slot + blocks free, arrival reached]
-           -> prefill-on-join (writes the prompt's KV into the slot's
-              blocks while other slots keep decoding)
-           -> decode (one token per engine step, streamed via
-              ``on_token``)
-           -> finish (EOS / budget / max_len) -> blocks freed, slot
-              admits the next queued request mid-flight
+           -> prefix match (shared full blocks mapped copy-free,
+              partial tail copy-on-write)
+           -> chunked prefill (chunk lanes ride the mixed step while
+              every decoding slot keeps decoding)
+           -> first token from the final chunk's last-position logits
+           -> decode (one token per tick, streamed via ``on_token``)
+           -> finish (EOS / budget / max_len) -> blocks released
+              (shared prefix blocks stay for other holders / the
+              prefix index), slot admits the next queued request
 
 ``repro.training.serve`` re-exports :class:`ServeConfig` /
 :class:`ServeEngine` for back-compat.
 """
 from repro.serve.engine import ServeConfig, ServeEngine
-from repro.serve.paged_cache import BlockPool, blocks_needed, bucket_len
+from repro.serve.paged_cache import (
+    BlockPool,
+    PrefixMatch,
+    blocks_needed,
+    bucket_len,
+)
 from repro.serve.scheduler import Request, Scheduler, Slot
 
 __all__ = [
     "BlockPool",
+    "PrefixMatch",
     "Request",
     "Scheduler",
     "ServeConfig",

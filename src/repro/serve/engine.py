@@ -7,20 +7,35 @@ With ``ServeConfig(paged=True)`` the same class runs the production
 path instead:
 
 * **paged KV cache** — per-layer global block pools + per-slot block
-  tables (models/attention, repro.serve.paged_cache); decode attention
-  reads scale with each sequence's live blocks, not ``max_len``.
+  tables (models/attention, repro.serve.paged_cache); attention reads
+  scale with each sequence's live blocks, not ``max_len``.
 * **continuous batching** — a fixed array of decode slots; finished
   sequences are evicted mid-flight (their blocks return to the pool)
   and queued requests are admitted the moment a slot and blocks free
-  up, prefilling into their freshly allocated blocks while the other
-  slots keep decoding (scheduler.py).
-* **Pallas paged flash-decode** — ``ApplyCfg(attn_impl="pallas")``
-  routes the decode step through the scalar-prefetch block-table-walk
-  kernel (kernels/decode_attention.py); "xla"/"auto"-on-CPU uses the
-  gather + masked-softmax oracle.
-* **live-token MoE decode** — the slot batch routes through the sorted
-  grouped-GEMM dispatch with free slots masked out of routing entirely,
-  so expert FLOPs track live sequences rather than ``max_batch``.
+  up (scheduler.py).
+* **chunked-prefill mixed step** (``admission="chunked"``, the
+  default) — every tick runs ONE jitted call carrying a fixed token
+  budget: one decode row per slot plus ``chunks_per_step`` prefill
+  chunk lanes of ``chunk_size`` prompt tokens (zoo.paged_mixed_step).
+  Admissions never stall decodes and never mint new jit signatures —
+  the engine asserts a SINGLE compiled signature for the step function
+  (``last_stats["compile_count"]``), killing the bucketed-length
+  per-admission prefill of ``admission="prefill_on_join"`` (kept as
+  the pre-chunking baseline for benchmarks/serve_bench.py).
+* **prefix caching** — the refcounted BlockPool indexes full prompt
+  blocks by content-chain hash; admissions sharing a prompt prefix map
+  those blocks copy-free (copy-on-write only for the partial tail
+  block) and skip their prefill chunks entirely
+  (``last_stats["prefix_hit_frac"]``).
+* **Pallas kernels** — ``ApplyCfg(attn_impl="pallas")`` routes decode
+  rows through the paged flash-decode kernel
+  (kernels/decode_attention.py) and chunk rows through the paged
+  prefill kernel (kernels/paged_prefill.py); "xla"/"auto"-on-CPU uses
+  the gather oracles.
+* **live-token MoE** — dead rows (free slots, idle chunk lanes, padded
+  chunk rows) are masked out of routing entirely, so expert FLOPs
+  track live tokens; prefill chunks keep expert work dense while
+  decode rows ride the sorted ragged dispatch.
 
 Decode routing stays Top-K token-choice (paper §3.1) — and, exactly as
 the static engine's docstring warned, token-choice capacity can couple a
@@ -31,6 +46,7 @@ pin that regime.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -59,6 +75,16 @@ class ServeConfig:
     # Default EOS token for requests that don't set their own (None =
     # run to the token budget).
     eos_id: Optional[int] = None
+    # --- admission path -------------------------------------------------
+    # "chunked": ONE jitted mixed step per tick (decode rows + prefill
+    # chunk lanes, single compile signature). "prefill_on_join": the
+    # pre-chunking baseline — one bucketed B=1 prefill call per
+    # admission that stalls in-flight decodes.
+    admission: str = "chunked"
+    chunk_size: int = 32  # prompt tokens per prefill chunk lane
+    chunks_per_step: int = 1  # chunk lanes per mixed step
+    # Content-hash prefix reuse across admissions (chunked mode only).
+    prefix_cache: bool = True
 
 
 class ServeEngine:
@@ -89,6 +115,19 @@ class ServeEngine:
             ac = dataclasses.replace(
                 ac, dispatch="sorted", sorted_block=blk
             )
+        if sc.paged and sc.admission not in ("chunked", "prefill_on_join"):
+            raise ValueError(
+                f"unknown admission mode {sc.admission!r} "
+                "(chunked | prefill_on_join)"
+            )
+        if sc.paged and sc.admission == "chunked" and (
+            sc.chunk_size < 1 or sc.chunks_per_step < 1
+        ):
+            raise ValueError(
+                "chunked admission needs chunk_size >= 1 and "
+                f"chunks_per_step >= 1; got {sc.chunk_size}, "
+                f"{sc.chunks_per_step}"
+            )
         self.params, self.cfg, self.sc, self.ac, self.ctx = (
             params, cfg, sc, ac, ctx
         )
@@ -107,6 +146,9 @@ class ServeEngine:
         self._prefill = jax.jit(_prefill)
         self._step = jax.jit(_step, donate_argnums=(2,))
         self._cache_dtype = cdtype
+        # Per-session engine stats of the LAST serve() call (compile
+        # counts, prefix hit rate, tick wall clocks, ...).
+        self.last_stats: dict = {}
 
         if sc.paged:
             # Fail fast on unsupported stacks (enc-dec / mamba / rwkv6):
@@ -114,20 +156,42 @@ class ServeEngine:
             # allocation will.
             zoo.init_paged_serve_cache(cfg, 2, sc.block_size, dtype=cdtype)
 
-            def _pprefill(params, tokens, cache, table, length):
-                return zoo.paged_prefill(
-                    params, tokens, cache, table, length, cfg,
-                    ac=ac, ctx=ctx,
-                )
+            if sc.admission == "chunked":
+                def _mstep(params, dec_tokens, chunk_tokens, cache,
+                           dec_tables, dec_lengths, chunk_tables,
+                           chunk_starts, chunk_lens):
+                    return zoo.paged_mixed_step(
+                        params, dec_tokens, chunk_tokens, cache,
+                        dec_tables, dec_lengths, chunk_tables,
+                        chunk_starts, chunk_lens, cfg, ac=ac, ctx=ctx,
+                    )
 
-            def _pstep(params, tokens, cache, tables, lengths):
-                return zoo.paged_decode_step(
-                    params, tokens, cache, tables, lengths, cfg,
-                    ac=ac, ctx=ctx,
-                )
+                def _cow(cache, src, dst):
+                    # Copy one pool block across every layer (the
+                    # prefix cache's copy-on-write for partial tail
+                    # blocks). Pool leaves carry a leading layer-stack
+                    # dim: (reps, P, bs, Kh, dh).
+                    return jax.tree.map(
+                        lambda p: p.at[:, dst].set(p[:, src]), cache
+                    )
 
-            self._paged_prefill = jax.jit(_pprefill, donate_argnums=(2,))
-            self._paged_step = jax.jit(_pstep, donate_argnums=(2,))
+                self._mixed_step = jax.jit(_mstep, donate_argnums=(3,))
+                self._copy_block = jax.jit(_cow, donate_argnums=(0,))
+            else:
+                def _pprefill(params, tokens, cache, table, length):
+                    return zoo.paged_prefill(
+                        params, tokens, cache, table, length, cfg,
+                        ac=ac, ctx=ctx,
+                    )
+
+                def _pstep(params, tokens, cache, tables, lengths):
+                    return zoo.paged_decode_step(
+                        params, tokens, cache, tables, lengths, cfg,
+                        ac=ac, ctx=ctx,
+                    )
+
+                self._paged_prefill = jax.jit(_pprefill, donate_argnums=(2,))
+                self._paged_step = jax.jit(_pstep, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     # static-batch path (legacy contract)
@@ -195,23 +259,41 @@ class ServeEngine:
     ):
         """Run a continuous-batching session over ``requests``.
 
-        Requests become visible at their ``arrival`` tick (decode-step
-        units); admission is FCFS into free slots with prefill-on-join.
-        Tokens stream through ``on_token(rid, token)`` (and each
-        request's own ``on_token``) the moment they are sampled.
+        Requests become visible at their ``arrival`` tick; admission is
+        FCFS into free slots. With ``admission="chunked"`` (default)
+        each tick is ONE jitted mixed step — decode rows plus prefill
+        chunk lanes — and prompt prefixes already in the pool are
+        reused copy-free; ``admission="prefill_on_join"`` runs the
+        pre-chunking per-admission B=1 prefill instead. Tokens stream
+        through ``on_token(rid, token)`` (and each request's own
+        ``on_token``) the moment they are sampled.
 
         Returns ``(outputs, stats)``: ``outputs[rid]`` is the full
         prompt + generated sequence (EOS included when hit);
         ``stats[rid]`` records arrival / admission / first-token /
-        finish ticks, generated count and the finish reason.
+        finish ticks, generated count, prefix-cached prompt tokens and
+        the finish reason. Engine-level counters (compile counts,
+        prefix hit rate, per-tick wall clocks) land in
+        ``self.last_stats``.
         """
         if not self.sc.paged:
             raise ValueError("serve() needs ServeConfig(paged=True)")
+        if self.sc.admission == "chunked":
+            return self._serve_chunked(requests, on_token=on_token,
+                                       rng=rng)
+        return self._serve_prefill_on_join(requests, on_token=on_token,
+                                           rng=rng)
+
+    def _session(self, requests, rng):
+        """Shared session setup: pool, scheduler, rng seed, buffers."""
         sc = self.sc
         bs = sc.block_size
         nb_max = -(-sc.max_len // bs)
         num_blocks = sc.num_blocks or (1 + sc.max_batch * nb_max)
-        pool = BlockPool(num_blocks, bs)
+        pool = BlockPool(
+            num_blocks, bs,
+            prefix_cache=sc.prefix_cache and sc.admission == "chunked",
+        )
         sched = Scheduler(sc.max_batch, pool, sc.max_len)
         for r in requests:
             sched.submit(r)
@@ -220,23 +302,17 @@ class ServeEngine:
         # per-token Gumbel draws (temperature sampling stays on host —
         # no per-slot device round-trips on the decode hot loop).
         seed0 = int(jax.random.randint(rng, (), 0, 2 ** 31 - 1))
-
-        B = sc.max_batch
         cache = zoo.init_paged_serve_cache(
             self.cfg, num_blocks, bs, dtype=self._cache_dtype
         )
-        tables = np.zeros((B, nb_max), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        cur = np.zeros((B, 1), np.int32)
-        outs = {r.rid: list(r.prompt) for r in requests}
+        return pool, sched, seed0, cache, nb_max, num_blocks
 
-        def emit(req, slot, tok, step):
-            outs[req.rid].append(tok)
-            slot.generated += 1
-            if on_token is not None:
-                on_token(req.rid, tok)
-            if req.on_token is not None:
-                req.on_token(req.rid, tok)
+    def _finisher(self, sched, clear_slot):
+        """Shared finish policy of both paged loops (EOS / token
+        budget): returns the per-token ``maybe_finish(slot, tok, step)``
+        closure; ``clear_slot(i)`` zeroes the caller's host-side lane
+        buffers for the freed slot."""
+        sc = self.sc
 
         def maybe_finish(slot, tok, step):
             req = slot.request
@@ -248,15 +324,214 @@ class ServeEngine:
                 reason = "budget"
             if reason is None:
                 return False
-            i = slot.index
-            tables[i, :] = 0
-            lengths[i] = 0
-            cur[i, 0] = 0
+            clear_slot(slot.index)
             sched.finish(slot, step, reason)
             return True
 
+        return maybe_finish
+
+    def _emitter(self, requests, on_token):
+        outs = {r.rid: list(r.prompt) for r in requests}
+
+        def emit(req, slot, tok):
+            outs[req.rid].append(tok)
+            slot.generated += 1
+            if on_token is not None:
+                on_token(req.rid, tok)
+            if req.on_token is not None:
+                req.on_token(req.rid, tok)
+
+        return outs, emit
+
+    # -- chunked mixed-step loop (the paged default) --------------------
+
+    def _serve_chunked(self, requests, *, on_token, rng):
+        sc = self.sc
+        bs = sc.block_size
+        B, NC, C = sc.max_batch, sc.chunks_per_step, sc.chunk_size
+        pool, sched, seed0, cache, nb, _ = self._session(requests, rng)
+        outs, emit = self._emitter(requests, on_token)
+
+        slot_tables = np.zeros((B, nb), np.int32)  # real per-slot tables
+        lengths = np.zeros((B,), np.int32)  # tokens in cache per slot
+        cur = np.zeros((B, 1), np.int32)
+        dec_tables = np.zeros((B, nb), np.int32)  # decode-lane view
+        dec_lengths = np.zeros((B,), np.int32)
+        ctoks = np.zeros((NC, C), np.int32)
+        ctab = np.zeros((NC, nb), np.int32)
+        cstart = np.zeros((NC,), np.int32)
+        clen = np.zeros((NC,), np.int32)
+
+        stats = {
+            "mode": "chunked",
+            "mixed_steps": 0,
+            "compile_events": [],
+            "decode_stall_ticks": 0,  # structurally 0: decode rows ride
+            "prefix_hit_tokens": 0,   # every mixed step
+            "prompt_tokens": 0,
+            "chunk_rows_used": 0,
+            "tick_wall": {},
+        }
+        self.last_stats = stats
+        compiled = 0
+
+        def clear_slot(i):
+            slot_tables[i, :] = 0
+            lengths[i] = 0
+            cur[i, 0] = 0
+
+        maybe_finish = self._finisher(sched, clear_slot)
+
         step = 0
         while sched.has_work:
+            stats["tick_wall"].setdefault(step, time.perf_counter())
+            # -- admission: slots + blocks, shared prefix mapped
+            # copy-free; CoW partial tails copied device-side.
+            for slot in sched.admit(step):
+                i, req = slot.index, slot.request
+                slot_tables[i, :] = 0
+                slot_tables[i, :len(slot.blocks)] = slot.blocks
+                if slot.cow is not None:
+                    src, dst, ntok = slot.cow
+                    cache = self._copy_block(
+                        cache, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32),
+                    )
+                    slot.length += ntok
+                    slot.cow = None
+                lengths[i] = slot.length
+                stats["prefix_hit_tokens"] += slot.prefix_tokens
+                stats["prompt_tokens"] += len(req.prompt)
+
+            # -- chunk-lane assignment: strict FCFS over prefilling
+            # slots; one slot may take several lanes in one tick (its
+            # later chunks attend the earlier ones' in-step writes).
+            chunks = []  # (slot, start, ntok)
+            planned = {}
+            for slot in sched.prefilling():
+                plen = len(slot.request.prompt)
+                pos = planned.get(slot.index, slot.length)
+                while len(chunks) < NC and pos < plen:
+                    n = min(C, plen - pos)
+                    chunks.append((slot, pos, n))
+                    pos += n
+                planned[slot.index] = pos
+                if len(chunks) >= NC:
+                    break
+
+            decoding = [s for s in sched.active if s.decoding]
+            if not decoding and not chunks:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                step = max(step + 1, nxt)  # idle: fast-forward the clock
+                continue
+
+            # -- build the fixed-shape lanes. Non-decoding slots are
+            # masked out of the decode lane (zero table row, length 0 ->
+            # trash-block write, no routing claims).
+            dec_tables[:] = 0
+            dec_lengths[:] = 0
+            for s in decoding:
+                dec_tables[s.index] = slot_tables[s.index]
+                dec_lengths[s.index] = lengths[s.index]
+            ctoks[:] = 0
+            ctab[:] = 0
+            cstart[:] = 0
+            clen[:] = 0
+            for ci, (slot, start, n) in enumerate(chunks):
+                ctoks[ci, :n] = slot.request.prompt[start:start + n]
+                ctab[ci] = slot_tables[slot.index]
+                cstart[ci] = start
+                clen[ci] = n
+
+            cache, logits = self._mixed_step(
+                self.params, jnp.asarray(cur), jnp.asarray(ctoks),
+                cache, jnp.asarray(dec_tables), jnp.asarray(dec_lengths),
+                jnp.asarray(ctab), jnp.asarray(cstart),
+                jnp.asarray(clen),
+            )
+            step += 1
+            stats["mixed_steps"] += 1
+            stats["chunk_rows_used"] += int(clen.sum())
+            n_compiled = self._mixed_step._cache_size()
+            if n_compiled != compiled:
+                compiled = n_compiled
+                stats["compile_events"].append(step)
+            lg_host = np.asarray(logits)  # ONE host sync per mixed step
+
+            # -- chunk bookkeeping first: lengths advance, prefix blocks
+            # register, completed prompts sample their first token.
+            for ci, (slot, start, n) in enumerate(chunks):
+                i, req = slot.index, slot.request
+                slot.length = start + n
+                lengths[i] = slot.length
+                slot.reg_blocks, slot.reg_parent = pool.register_prefix(
+                    req.prompt, slot.blocks, slot.length,
+                    start_block=slot.reg_blocks, parent=slot.reg_parent,
+                )
+                if slot.length == len(req.prompt):
+                    slot.first_token_at = step
+                    tok = self._sample_one(lg_host[B + ci], seed0,
+                                           req.rid, 0)
+                    emit(req, slot, tok)
+                    if not maybe_finish(slot, tok, step):
+                        slot.decoding = True
+                        cur[i, 0] = tok
+
+            # -- decode bookkeeping
+            for slot in decoding:
+                i, req = slot.index, slot.request
+                slot.length += 1  # cur token entered the cache
+                lengths[i] += 1
+                tok = self._sample_one(lg_host[i], seed0, req.rid,
+                                       slot.generated)
+                emit(req, slot, tok)
+                if not maybe_finish(slot, tok, step):
+                    cur[i, 0] = tok
+
+        stats["compile_count"] = self._mixed_step._cache_size()
+        stats["prefix_hit_frac"] = (
+            stats["prefix_hit_tokens"] / max(stats["prompt_tokens"], 1)
+        )
+        assert pool.num_free == pool.capacity, "leaked KV blocks"
+        return outs, sched.finished
+
+    # -- prefill-on-join loop (pre-chunking baseline) -------------------
+
+    def _serve_prefill_on_join(self, requests, *, on_token, rng):
+        sc = self.sc
+        bs = sc.block_size
+        pool, sched, seed0, cache, nb_max, _ = self._session(requests, rng)
+        outs, emit = self._emitter(requests, on_token)
+
+        B = sc.max_batch
+        tables = np.zeros((B, nb_max), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        cur = np.zeros((B, 1), np.int32)
+
+        stats = {
+            "mode": "prefill_on_join",
+            "mixed_steps": 0,
+            "compile_events": [],
+            "decode_stall_ticks": 0,
+            "prefix_hit_tokens": 0,
+            "prompt_tokens": 0,
+            "chunk_rows_used": 0,
+            "tick_wall": {},
+        }
+        self.last_stats = stats
+
+        def clear_slot(i):
+            tables[i, :] = 0
+            lengths[i] = 0
+            cur[i, 0] = 0
+
+        maybe_finish = self._finisher(sched, clear_slot)
+
+        step = 0
+        while sched.has_work:
+            stats["tick_wall"].setdefault(step, time.perf_counter())
             # -- admission: prefill-on-join into freshly allocated blocks
             for slot in sched.admit(step):
                 i, req = slot.index, slot.request
@@ -266,6 +541,11 @@ class ServeEngine:
                 tables[i, :len(slot.blocks)] = slot.blocks
                 toks = np.zeros((1, sp), np.int32)
                 toks[0, :plen] = req.prompt
+                # Each admission is an EXTRA device call; every already-
+                # decoding slot sits out this call — the decode stall
+                # the chunked mixed step exists to remove.
+                if any(s.decoding for s in sched.active if s is not slot):
+                    stats["decode_stall_ticks"] += 1
                 cache, lg = self._paged_prefill(
                     self.params, jnp.asarray(toks), cache,
                     jnp.asarray(tables[i:i + 1]),
@@ -274,11 +554,13 @@ class ServeEngine:
                 slot.length = plen
                 lengths[i] = plen
                 slot.first_token_at = step
+                stats["prompt_tokens"] += plen
                 tok = self._sample_one(
                     np.asarray(lg[0, 0]), seed0, req.rid, 0
                 )
-                emit(req, slot, tok, step)
+                emit(req, slot, tok)
                 if not maybe_finish(slot, tok, step):
+                    slot.decoding = True
                     cur[i, 0] = tok
 
             active = sched.active
@@ -296,6 +578,7 @@ class ServeEngine:
                 jnp.asarray(tables), jnp.asarray(lengths),
             )
             step += 1
+            stats["mixed_steps"] += 1
             lg_host = np.asarray(logits[:, 0])  # ONE device sync per step
             for slot in active:
                 i, req = slot.index, slot.request
@@ -304,10 +587,15 @@ class ServeEngine:
                 tok = self._sample_one(
                     lg_host[i], seed0, req.rid, slot.generated
                 )
-                emit(req, slot, tok, step)
+                emit(req, slot, tok)
                 if not maybe_finish(slot, tok, step):
                     cur[i, 0] = tok
 
+        stats["compile_count"] = (
+            self._paged_prefill._cache_size()
+            + self._paged_step._cache_size()
+        )
+        stats["prefix_hit_frac"] = 0.0
         assert pool.num_free == pool.capacity, "leaked KV blocks"
         return outs, sched.finished
 

@@ -1,19 +1,35 @@
-"""Continuous-batching scheduler: slots, FCFS admission, eviction.
+"""Continuous-batching scheduler: slots, FCFS admission, chunked
+prefill, eviction.
 
 Pure host-side bookkeeping (no jax) so the policy is unit-testable in
-isolation. The clock is the engine's decode-step counter: one tick per
-batched decode step, request arrivals are expressed in ticks.
+isolation. The clock is the engine's step counter: one tick per mixed
+step (or per batched decode step in prefill-on-join mode), request
+arrivals are expressed in ticks.
 
 Slot lifecycle::
 
-    FREE --admit (queue head arrived, slot free, blocks available)-->
-    ACTIVE --finish (EOS / token budget / max_len)--> FREE
+    FREE --admit (queue head arrived, slot free, blocks available;
+                  shared prefix blocks mapped copy-free)-->
+    ACTIVE/prefilling --chunks (token-budget lanes, FCFS)-->
+    ACTIVE/decoding --finish (EOS / token budget / max_len)--> FREE
 
-Admission is strict FCFS in ARRIVAL order (submission order breaks
-ties): if the earliest-arrived waiting request cannot be admitted (no
-free slot, or the pool cannot cover its worst-case block footprint),
-nothing behind it is — keeping per-request latency predictable instead
-of starving large requests behind a stream of small ones.
+Admission policy (chunk-aware):
+
+* **decode priority** — the mixed step's token budget reserves one row
+  per decode slot; prefill chunks ride the separate chunk lanes, so an
+  admission NEVER stalls in-flight decodes (the prefill-on-join mode's
+  per-admission B=1 forward did).
+* **strict FCFS in ARRIVAL order** (submission order breaks ties) for
+  both slot admission and chunk-lane assignment: if the earliest
+  waiting request cannot be admitted (no free slot, or the pool cannot
+  cover its worst-case block footprint), nothing behind it is.
+* **starvation bound** — FCFS chunk assignment means the oldest
+  prefilling request takes every tick's first chunk lane until its
+  prompt completes: a request admitted at tick ``t`` with ``p`` prompt
+  tokens left after prefix hits sees its first token by tick
+  ``t + ceil(p / chunk_size)`` regardless of later arrivals, and a
+  queued request is delayed only by requests ahead of it in arrival
+  order (no overtaking, no indefinite postponement).
 """
 from __future__ import annotations
 
@@ -33,7 +49,7 @@ class Request:
     prompt: list
     max_new: int = 32
     eos_id: Optional[int] = None
-    arrival: int = 0  # decode-step tick the request becomes visible
+    arrival: int = 0  # tick the request becomes visible
     # Streaming callback: called as on_token(rid, token) per new token.
     on_token: Optional[Callable[[int, int], None]] = None
 
@@ -48,12 +64,23 @@ class Slot:
     generated: int = 0  # new tokens emitted so far
     budget: int = 0  # max new tokens (request.max_new clamped to max_len)
     admitted_at: int = 0
+    admit_seq: int = 0  # FCFS tiebreaker for chunk-lane assignment
     first_token_at: int = 0
+    decoding: bool = False  # prompt fully prefilled, first token sampled
+    prefix_tokens: int = 0  # prompt tokens served from the prefix cache
+    # Copy-on-write donor for the partial tail block: (src_block,
+    # dst_block, tokens) — the ENGINE applies the device copy, then
+    # bumps slot.length by tokens.
+    cow: Optional[tuple[int, int, int]] = None
+    # Prefix-registration resume point (blocks indexed so far + chain
+    # hash there) so per-chunk registration never re-hashes the prefix.
+    reg_blocks: int = 0
+    reg_parent: str = ""
 
 
 class Scheduler:
     """FCFS continuous-batching admission over a fixed slot array + the
-    shared :class:`BlockPool`."""
+    shared refcounted :class:`BlockPool` (prefix-aware)."""
 
     def __init__(self, max_batch: int, pool: BlockPool, max_len: int):
         self.pool = pool
@@ -62,6 +89,7 @@ class Scheduler:
         # Arrival-ordered wait queue: (arrival, submission seq, Request).
         self.queue: list[tuple[int, int, Request]] = []
         self._seq = 0
+        self._admit_seq = 0
         self._rids: set[int] = set()
         self.finished: dict[int, dict] = {}
 
@@ -99,8 +127,11 @@ class Scheduler:
     # -- admission ------------------------------------------------------
     def admit(self, now: int) -> list[Slot]:
         """Admit queued requests (FCFS) into free slots while blocks
-        last. Returns the slots to prefill; block tables/pool state are
-        the engine's to apply."""
+        last, mapping shared prompt-prefix blocks copy-free. Returns the
+        slots to prefill (``slot.length`` counts the prefix-cached
+        tokens already in the pool; ``slot.cow`` names a pending
+        copy-on-write for the engine to apply); block tables / pool
+        state are the engine's to apply."""
         out = []
         while self.queue and self.queue[0][0] <= now:
             slot = next(
@@ -111,25 +142,64 @@ class Scheduler:
             req = self.queue[0][2]
             plen = len(req.prompt)
             budget = min(req.max_new, self.max_len - plen)
-            blocks = self.pool.alloc(
-                blocks_needed(plen, budget, self.pool.block_size)
-            )
-            if blocks is None:
-                break  # strict FCFS: nothing overtakes the queue head
+            need = blocks_needed(plen, budget, self.pool.block_size)
+            match = self.pool.match_prefix(req.prompt)
+            shared = list(match.blocks)
+            # Acquire the shared blocks FIRST so the fresh allocation
+            # below cannot evict their content out from under us; roll
+            # back if the pool cannot cover the rest (strict FCFS:
+            # nothing overtakes the queue head).
+            self.pool.share(shared)
+            fresh = self.pool.alloc(need - len(shared))
+            if fresh is None:
+                self.pool.free(shared)
+                break
+            cow = None
+            if (
+                match.cow_block is not None
+                # The donor may have been evicted by our own alloc.
+                and self.pool.is_indexed(match.cow_block)
+            ):
+                cow = (match.cow_block, fresh[0], match.cow_tokens)
             self.queue.pop(0)
             slot.state = ACTIVE
             slot.request = req
-            slot.blocks = tuple(blocks)
-            slot.length = 0
+            slot.blocks = tuple(shared) + tuple(fresh)
+            slot.length = match.tokens  # prefix-cached tokens
+            slot.prefix_tokens = match.tokens + (cow[2] if cow else 0)
+            slot.cow = cow
             slot.generated = 0
             slot.budget = budget
             slot.admitted_at = now
+            slot.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            slot.decoding = False
+            slot.first_token_at = 0
+            slot.reg_blocks = 0
+            slot.reg_parent = ""
             out.append(slot)
         return out
+
+    # -- chunked prefill ------------------------------------------------
+    def prefilling(self) -> list[Slot]:
+        """ACTIVE slots whose prompt is not fully in the cache yet, in
+        strict FCFS order (admission order) — the chunk-lane assignment
+        order."""
+        return sorted(
+            (
+                s for s in self.slots
+                if s.state == ACTIVE
+                and s.length < len(s.request.prompt)
+            ),
+            key=lambda s: s.admit_seq,
+        )
 
     # -- completion -----------------------------------------------------
     def finish(self, slot: Slot, now: int, reason: str) -> None:
         req = slot.request
+        # One free per admission, shared and fresh blocks alike — the
+        # refcounted pool keeps shared prefix blocks alive for their
+        # other holders (and caches the content of fully released ones).
         self.pool.free(slot.blocks)
         self.finished[req.rid] = {
             "arrival": req.arrival,
@@ -137,6 +207,7 @@ class Scheduler:
             "first_token_at": slot.first_token_at,
             "finished_at": now,
             "generated": slot.generated,
+            "prefix_tokens": slot.prefix_tokens,
             "reason": reason,
         }
         slot.state = FREE
@@ -145,6 +216,11 @@ class Scheduler:
         slot.length = 0
         slot.generated = 0
         slot.budget = 0
+        slot.decoding = False
+        slot.prefix_tokens = 0
+        slot.cow = None
+        slot.reg_blocks = 0
+        slot.reg_parent = ""
 
     # -- queries --------------------------------------------------------
     @property

@@ -1,0 +1,387 @@
+"""Chunked-prefill mixed-step engine: single-compile-signature guard,
+chunked==solo token parity (incl. temperature), prefix-cache
+correctness under refcounted frees / eviction / copy-on-write, and
+pool accounting when requests finish right after (or during) prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.serve import (
+    BlockPool,
+    Request,
+    Scheduler,
+    ServeConfig,
+    ServeEngine,
+)
+
+BS = 8
+
+
+def _dropless(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = _dropless(get_reduced("granite-moe-1b-a400m"))
+    p = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    vals, _ = pm.split(p)
+    return cfg, vals
+
+
+@pytest.fixture(scope="module")
+def chunked_engine(granite):
+    cfg, vals = granite
+    return ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=3, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# refcounted block pool + prefix index (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_refcounted_free_and_double_free():
+    pool = BlockPool(6, BS)
+    a = pool.alloc(2)
+    pool.share(a)  # second holder
+    pool.free(a)
+    assert pool.num_free == 3  # still held once
+    assert all(pool.refcount(b) == 1 for b in a)
+    pool.free(a)
+    assert pool.num_free == 5
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a)
+
+
+def test_alloc_never_reuses_a_live_block():
+    pool = BlockPool(6, BS)
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert set(a).isdisjoint(b)
+    assert pool.alloc(1) is None  # pool exhausted, no live reuse
+    pool.free(a)
+    c = pool.alloc(3)
+    assert set(c).isdisjoint(b)
+    pool.free(b)
+    pool.free(c)
+
+
+def test_prefix_register_match_roundtrip_and_plen_cap():
+    pool = BlockPool(8, BS)
+    prompt = list(range(100, 100 + 24))  # 3 full blocks
+    blocks = pool.alloc(4)
+    pool.register_prefix(prompt, blocks, 24)
+    # identical prompt: full-block matches capped at plen - 1 tokens
+    m = pool.match_prefix(list(prompt))
+    assert m.blocks == tuple(blocks[:2]) and m.tokens == 16
+    # ...but the dropped third block comes back as a CoW donor for the
+    # partial tail (7 of its 8 tokens — never the whole prompt).
+    assert m.cow_block == blocks[2] and m.cow_tokens == 7
+    # longer prompt sharing the full 24: all 3 blocks match copy-free
+    m2 = pool.match_prefix(prompt + [7, 8])
+    assert m2.blocks == tuple(blocks[:3]) and m2.tokens == 24
+    assert m2.cow_block is None  # block 4 was never registered
+    # diverging first block: no match
+    assert pool.match_prefix([1] + prompt[1:]).tokens == 0
+    pool.free(blocks)
+
+
+def test_freed_blocks_stay_matchable_until_evicted():
+    pool = BlockPool(6, BS)  # capacity 5
+    prompt = list(range(16))
+    blocks = pool.alloc(3)
+    pool.register_prefix(prompt, blocks, 16)
+    pool.free(blocks)
+    assert pool.num_cached == 2 and pool.num_free == 5
+    m = pool.match_prefix(prompt + [50])
+    assert m.blocks == tuple(blocks[:2])
+    # share resurrects the cached blocks out of the free list
+    pool.share(m.blocks)
+    assert pool.num_free == 3
+    pool.free(m.blocks)
+    # exhaust the plain free list -> cached blocks get evicted (oldest
+    # first) and their index entries die with them
+    grab = pool.alloc(5)
+    assert pool.match_prefix(prompt + [50]).tokens == 0
+    assert pool.num_cached == 0
+    pool.free(grab)
+    assert pool.num_free == pool.capacity
+
+
+def test_scheduler_admission_shares_prefix_blocks():
+    pool = BlockPool(1 + 8, BS)
+    sched = Scheduler(2, pool, max_len=64)
+    donor = list(range(200, 200 + 17))  # 2 full blocks + 1 tail token
+    sched.submit(Request(rid=0, prompt=donor, max_new=4))
+    (s0,) = sched.admit(0)
+    # donor prefilled: engine registers covered full blocks
+    pool.register_prefix(donor, s0.blocks, 17)
+    sched.submit(Request(rid=1, prompt=list(donor), max_new=4))
+    (s1,) = sched.admit(1)
+    assert s1.blocks[:2] == s0.blocks[:2]  # copy-free shared prefix
+    assert s1.length == 16 and s1.prefix_tokens == 16
+    assert pool.refcount(s0.blocks[0]) == 2
+    sched.finish(s0, 5, "budget")  # donor leaves first
+    assert pool.refcount(s1.blocks[0]) == 1  # survivor keeps the block
+    sched.finish(s1, 9, "budget")
+    assert pool.num_free == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# engine identities
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_matches_static_engine_greedy(granite):
+    cfg, vals = granite
+    static = ServeEngine(vals, cfg, ServeConfig(max_batch=3, max_len=64))
+    chunked = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=3, max_len=64, paged=True, block_size=BS,
+                    chunk_size=4, chunks_per_step=2),
+    )
+    prompts = [[5, 6, 7, 8], [9, 10, 11, 12], [1, 2, 3, 4]]
+    assert static.generate(prompts, max_new=6) == chunked.generate(
+        prompts, max_new=6
+    )
+
+
+def test_chunked_matches_prefill_on_join(granite):
+    """The acceptance identity: the mixed step must be a pure perf
+    refactor — token-identical to the per-admission prefill baseline on
+    a heterogeneous staggered trace."""
+    cfg, vals = granite
+    common = dict(max_batch=2, max_len=64, paged=True, block_size=BS)
+    chunked = ServeEngine(
+        vals, cfg, ServeConfig(**common, chunk_size=8, chunks_per_step=1)
+    )
+    poj = ServeEngine(
+        vals, cfg, ServeConfig(**common, admission="prefill_on_join")
+    )
+    reqs = lambda: [
+        Request(rid=0, prompt=list(range(40, 59)), max_new=5),
+        Request(rid=1, prompt=[9, 10, 11], max_new=6, arrival=2),
+        Request(rid=2, prompt=list(range(70, 82)), max_new=4, arrival=3),
+    ]
+    o_c, s_c = chunked.serve(reqs())
+    o_p, s_p = poj.serve(reqs())
+    assert o_c == o_p
+    assert chunked.last_stats["decode_stall_ticks"] == 0
+    assert poj.last_stats["decode_stall_ticks"] > 0
+
+
+def test_chunked_prefill_while_others_decode_matches_solo(chunked_engine):
+    """A request prefilled in CHUNKS while other slots decode yields
+    byte-identical tokens to a solo run — mid-flight admission must not
+    perturb anyone (and vice versa)."""
+    reqs = [
+        Request(rid=0, prompt=[5, 6, 7], max_new=8),
+        # 19-token prompt: 3 chunk-lane assignments spread over ticks
+        # while rid 0 decodes
+        Request(rid=1, prompt=list(range(100, 119)), max_new=5,
+                arrival=2),
+        Request(rid=2, prompt=[1, 2], max_new=3, arrival=4),
+    ]
+    outs, stats = chunked_engine.serve(reqs)
+    for r in reqs:
+        solo, _ = chunked_engine.serve(
+            [Request(rid=r.rid, prompt=list(r.prompt),
+                     max_new=r.max_new)]
+        )
+        assert outs[r.rid] == solo[r.rid], f"rid {r.rid} diverged"
+    assert stats[1]["admitted_at"] == 2
+    assert stats[1]["first_token_at"] > stats[1]["admitted_at"]
+
+
+def test_chunked_temperature_matches_solo(granite):
+    """Temperature sampling folds rng on (rid, token index) — the
+    composition-independent draws survive the chunked admission path."""
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=2, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=1, temperature=0.8),
+    )
+    rng = jax.random.PRNGKey(7)
+    reqs = [
+        Request(rid=0, prompt=[5, 6], max_new=4),
+        Request(rid=1, prompt=list(range(80, 93)), max_new=4, arrival=1),
+    ]
+    outs, _ = eng.serve(reqs, rng=rng)
+    for r in reqs:
+        solo, _ = eng.serve(
+            [Request(rid=r.rid, prompt=list(r.prompt),
+                     max_new=r.max_new)],
+            rng=rng,
+        )
+        assert outs[r.rid] == solo[r.rid]
+
+
+def test_single_mixed_step_signature(granite):
+    """The regression guard for the bucketed-prefill recompile zoo: a
+    heterogeneous trace (prompt lengths across buckets, staggered
+    arrivals, evictions, re-admissions) compiles the mixed step exactly
+    ONCE."""
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=2, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=2),
+    )
+    reqs = [
+        Request(rid=i, prompt=list(range(10 + i, 10 + i + plen)),
+                max_new=3 + i % 3, arrival=2 * i)
+        for i, plen in enumerate([3, 17, 9, 26, 1, 12])
+    ]
+    eng.serve(reqs)
+    assert eng.last_stats["compile_count"] == 1
+    assert eng.last_stats["compile_events"] == [1]
+    # the baseline really does mint a signature per prompt bucket
+    poj = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=2, max_len=64, paged=True, block_size=BS,
+                    admission="prefill_on_join"),
+    )
+    poj.serve([
+        Request(rid=i, prompt=list(range(10, 10 + plen)), max_new=2)
+        for i, plen in enumerate([3, 17, 26])
+    ])
+    assert poj.last_stats["compile_count"] > 2
+
+
+# ---------------------------------------------------------------------------
+# prefix caching through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_hits_and_stays_exact(granite):
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=2, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=2),
+    )
+    prefix = list(range(30, 30 + 18))
+    reqs = [
+        Request(rid=0, prompt=prefix + [7, 8], max_new=4),
+        Request(rid=1, prompt=prefix + [9], max_new=5, arrival=4),
+        Request(rid=2, prompt=prefix + [7, 8], max_new=4, arrival=8),
+    ]
+    outs, stats = eng.serve(reqs)
+    assert stats[0]["prefix_tokens"] == 0  # first writer pays
+    assert stats[1]["prefix_tokens"] >= 16  # 2 full shared blocks
+    assert stats[2]["prefix_tokens"] >= 16
+    assert eng.last_stats["prefix_hit_frac"] > 0
+    for r in reqs:
+        solo, _ = ServeEngine(
+            vals, cfg,
+            ServeConfig(max_batch=2, max_len=64, paged=True,
+                        block_size=BS, chunk_size=8, chunks_per_step=2,
+                        prefix_cache=False),
+        ).serve([Request(rid=r.rid, prompt=list(r.prompt),
+                         max_new=r.max_new)])
+        assert outs[r.rid] == solo[r.rid], f"rid {r.rid} diverged"
+
+
+def test_prefix_cache_cow_partial_tail(granite):
+    """A follower sharing the donor's prompt THROUGH a partial tail
+    block gets the full blocks copy-free plus a device-side
+    copy-on-write of the tail — and stays token-identical to solo."""
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=2, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=2),
+    )
+    donor = list(range(100, 100 + 26))  # 3 full blocks registered
+    follower = donor[:20] + [9]  # shares 16 full + 4 CoW tokens
+    outs, stats = eng.serve([
+        Request(rid=0, prompt=donor, max_new=3),
+        Request(rid=1, prompt=follower, max_new=4, arrival=6),
+    ])
+    assert stats[1]["prefix_tokens"] == 20  # 16 shared + 4 copied
+    solo, _ = eng.serve(
+        [Request(rid=9, prompt=list(follower), max_new=4)]
+    )
+    assert outs[1][len(follower):] == solo[9][len(follower):]
+
+
+def test_prefix_cache_survives_donor_eviction(granite):
+    """The donor finishes (its blocks drop to refcount 0, content
+    cached) BEFORE the follower arrives: the follower still hits, and
+    a third engine-filling request later evicts the cached content
+    without corrupting anyone."""
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        # Tight pool: 1 trash + 8 blocks forces real eviction pressure.
+        ServeConfig(max_batch=1, max_len=40, paged=True, block_size=BS,
+                    num_blocks=9, chunk_size=8, chunks_per_step=1),
+    )
+    prefix = list(range(50, 50 + 16))
+    reqs = [
+        Request(rid=0, prompt=prefix + [1], max_new=2),
+        Request(rid=1, prompt=prefix + [2], max_new=2, arrival=20),
+        # unrelated request large enough to recycle the cached blocks
+        Request(rid=2, prompt=list(range(200, 231)), max_new=3,
+                arrival=40),
+        Request(rid=3, prompt=prefix + [3], max_new=2, arrival=60),
+    ]
+    outs, stats = eng.serve(reqs)
+    assert stats[1]["prefix_tokens"] == 16  # hit on cached-free blocks
+    assert stats[2]["prefix_tokens"] == 0
+    for r in reqs:
+        solo, _ = eng.serve(
+            [Request(rid=r.rid, prompt=list(r.prompt),
+                     max_new=r.max_new)]
+        )
+        assert outs[r.rid] == solo[r.rid], f"rid {r.rid} diverged"
+
+
+def test_eos_on_first_token_after_chunked_prefill(granite):
+    """Finish in the same tick the final chunk ran: blocks return to
+    the pool exactly once (the engine drain assert would catch a
+    double-free or leak) and the queued request takes over."""
+    cfg, vals = granite
+    eng = ServeEngine(
+        vals, cfg,
+        ServeConfig(max_batch=1, max_len=64, paged=True, block_size=BS,
+                    chunk_size=8, chunks_per_step=1),
+    )
+    prompt = list(range(100, 117))  # 3 chunk ticks
+    base, _ = eng.serve([Request(rid=0, prompt=list(prompt), max_new=4)])
+    eos = base[0][len(prompt)]  # the first generated token
+    outs, stats = eng.serve([
+        Request(rid=0, prompt=list(prompt), max_new=4, eos_id=eos),
+        Request(rid=1, prompt=[5, 6], max_new=2, arrival=0),
+    ])
+    assert stats[0]["reason"] == "eos"
+    assert stats[0]["generated"] == 1
+    assert stats[1]["admitted_at"] >= stats[0]["finished_at"]
+
+
+def test_streaming_through_chunked_path(chunked_engine):
+    got = []
+    prompt = list(range(100, 119))  # 3 chunks -> 2 ticks of prefill
+    outs, stats = chunked_engine.serve(
+        [Request(rid=0, prompt=list(prompt), max_new=5)],
+        on_token=lambda rid, t: got.append((rid, t)),
+    )
+    assert [t for _, t in got] == outs[0][len(prompt):]
+    assert stats[0]["first_token_at"] >= 2  # really was chunked
