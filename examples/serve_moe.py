@@ -13,17 +13,31 @@ prompt prefixes served from the block-level prefix cache), per-token
 streaming, and early-finish eviction freeing KV blocks for the queue.
 Decode runs dropless (capacity >= experts) so continuous batching is
 output-identical to serving each request alone.
+
+Robustness knobs (paged mode; see the failure-modes table in
+``repro/serve/__init__.py``): ``--queue-limit`` + ``--queue-policy``
+bound the wait queue, ``--shed-occupancy`` / ``--shed-stall-ticks``
+drive load shedding, ``--preempt`` enables preempt-and-requeue under
+pool exhaustion, ``--ttft-deadline`` / ``--deadline`` set default
+per-request deadlines (ticks after arrival), ``--watchdog-ticks``
+bounds zero-progress spins, ``--chaos SEED`` turns on the seeded fault
+injector. ``--overload`` serves a deliberately over-subscribed trace so
+sheds/timeouts/preemptions actually fire and the per-status accounting
+is visible.
 """
 import argparse
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.configs import MoECfg, get_reduced
 from repro.core.upcycle import upcycle_params
 from repro.models import model_zoo as zoo
 from repro.models import param as pm
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import (
+    ChaosConfig, Request, ServeConfig, ServeEngine, blocks_needed,
+)
 
 
 def build():
@@ -42,23 +56,121 @@ def build():
     return params, sparse_cfg
 
 
+def serve_overload(params, sparse_cfg, sc, args):
+    """Over-subscribed trace through 2 slots + a deliberately small
+    block pool: 10 staggered requests at ~2 arrivals/tick, two of them
+    high-priority late arrivals. With the robustness knobs off this
+    would just queue without bound; with them on, the lifecycle events
+    show shedding / timeouts / preempt-and-requeue as they happen and
+    every request still ends in exactly one terminal status."""
+    if sc.queue_limit == 0 and sc.queue_policy == "block" \
+            and sc.default_ttft_deadline is None and not sc.preempt:
+        print("[serve] --overload with no robustness knobs: defaulting "
+              "--queue-limit 3 --queue-policy shed-oldest --preempt")
+        sc = dataclasses.replace(sc, queue_limit=3,
+                                 queue_policy="shed-oldest",
+                                 preempt=True)
+    # Pool sized to ONE resident request plus a spare block, so block
+    # starvation (and with --preempt, preempt-and-requeue of the
+    # lower-priority resident) actually fires.
+    need = blocks_needed(12, 8, sc.block_size)
+    sc = dataclasses.replace(sc, num_blocks=1 + need + 1)
+    eng = ServeEngine(params, sparse_cfg, sc)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, arrival=i // 2,
+                prompt=[int(t) for t in rng.integers(1, 250, size=12)],
+                max_new=8,
+                priority=1 if i >= 8 else 0)
+        for i in range(10)
+    ]
+    print(f"[serve] overload: {len(reqs)} requests, "
+          f"{sc.max_batch} slots, {sc.num_blocks - 1} usable KV blocks, "
+          f"policy={sc.queue_policy} queue_limit={sc.queue_limit} "
+          f"preempt={sc.preempt} ttft_deadline={sc.default_ttft_deadline}")
+    outs, stats = eng.serve(
+        reqs,
+        on_event=lambda rid, ev, detail: print(
+            f"  [event] req{rid}: {ev}" + (f" ({detail})" if detail else "")
+        ),
+    )
+    for r in reqs:
+        s = stats[r.rid]
+        print(f"  request {r.rid}: status={s['status']} "
+              f"reason={s['reason']} generated={s['generated']} "
+              f"preemptions={s['preemptions']} "
+              f"prefix_hit={s['prefix_tokens']}")
+    es = eng.last_stats
+    print(f"  engine: status_counts={es['status_counts']} "
+          f"preemptions={es['preemptions']} "
+          f"watchdog_failures={es['watchdog_failures']} "
+          f"peak_occupancy={es['peak_occupancy']:.2f} "
+          f"compile_count={es['compile_count']}")
+    if sc.chaos is not None:
+        print(f"  chaos: {es['chaos']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true")
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--stream", action="store_true")
+    rb = ap.add_argument_group("robustness (paged mode)")
+    rb.add_argument("--overload", action="store_true",
+                    help="serve an over-subscribed trace so the "
+                         "robustness paths (shed/timeout/preempt) fire")
+    rb.add_argument("--queue-limit", type=int, default=0,
+                    help="max visible waiting requests (0 = unbounded)")
+    rb.add_argument("--queue-policy", default="block",
+                    choices=["block", "shed-newest", "shed-oldest"])
+    rb.add_argument("--shed-occupancy", type=float, default=None,
+                    help="pool-occupancy fraction that triggers "
+                         "load shedding")
+    rb.add_argument("--shed-stall-ticks", type=int, default=0,
+                    help="consecutive block-starved ticks that trigger "
+                         "load shedding (0 = off)")
+    rb.add_argument("--preempt", action="store_true",
+                    help="preempt-and-requeue lower-priority requests "
+                         "under pool exhaustion")
+    rb.add_argument("--ttft-deadline", type=int, default=None,
+                    help="default first-token deadline, ticks after "
+                         "arrival")
+    rb.add_argument("--deadline", type=int, default=None,
+                    help="default completion deadline, ticks after "
+                         "arrival")
+    rb.add_argument("--watchdog-ticks", type=int, default=32,
+                    help="zero-progress ticks before the watchdog "
+                         "fails the stuck head")
+    rb.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="enable the seeded fault injector")
     args = ap.parse_args()
     params, sparse_cfg = build()
     prompts = [[10, 42, 7], [99, 3], [5, 5, 5, 5], [200, 17]]
 
+    if args.overload and not args.paged:
+        ap.error("--overload requires --paged")
     if args.paged:
-        eng = ServeEngine(
-            params, sparse_cfg,
-            ServeConfig(max_batch=2, max_len=128, paged=True,
-                        block_size=args.block_size,
-                        chunk_size=args.chunk_size),
+        chaos = (ChaosConfig(seed=args.chaos, evict_prob=0.1,
+                             hold_prob=0.15, burst_prob=0.1,
+                             storm_prob=0.05)
+                 if args.chaos is not None else None)
+        sc = ServeConfig(
+            max_batch=2, max_len=128, paged=True,
+            block_size=args.block_size, chunk_size=args.chunk_size,
+            queue_limit=args.queue_limit,
+            queue_policy=args.queue_policy,
+            shed_occupancy=args.shed_occupancy,
+            shed_stall_ticks=args.shed_stall_ticks,
+            preempt=args.preempt,
+            default_ttft_deadline=args.ttft_deadline,
+            default_deadline=args.deadline,
+            watchdog_ticks=args.watchdog_ticks,
+            chaos=chaos,
         )
+        if args.overload:
+            return serve_overload(params, sparse_cfg, sc, args)
+        eng = ServeEngine(params, sparse_cfg, sc)
         # 5 requests through 2 slots: later arrivals queue and are
         # admitted mid-flight as earlier requests finish and free their
         # blocks; rid 4 repeats rid 3's prompt prefix AFTER rid 3's

@@ -33,6 +33,14 @@ echo "[verify] dispatch parity on a forced 8-device CPU mesh"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   python -m pytest -x -q tests/test_ep_dispatch.py
 
+echo "[verify] chaos lane: fault-injection sweep (REPRO_CHAOS=1, wider seeds)"
+# tests/test_serve_chaos.py runs in tier-1 above with a small seed
+# sweep; REPRO_CHAOS=1 widens the seeded fault-injection sweep (random
+# evictions, pool-exhaustion holds, admission bursts, deadline storms —
+# pool invariants audited every tick, greedy parity vs a clean run) so
+# every verify exercises the robustness layer harder than CI-minimum.
+REPRO_CHAOS=1 python -m pytest -x -q tests/test_serve_chaos.py
+
 echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
@@ -42,10 +50,13 @@ echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # continuous-batching vs static-batch comparison under a Poisson
 # arrival trace PLUS the long-prompt bursty scenario comparing static /
 # prefill-on-join / chunked-mixed-step admission (wall-clock TTFT,
-# decode stalls, prefix-cache hit rate; the paged serve subsystem's
-# tests themselves — tests/test_paged_decode.py, test_paged_prefill.py,
-# test_serve_paged.py, test_serve_chunked.py — run in the tier-1 pytest
-# above); roofline keeps the static per-kernel FLOP/byte models —
+# decode stalls, prefix-cache hit rate) AND the overload scenario
+# (~2x sustainable arrival rate, shedding + TTFT deadlines) that
+# writes the BENCH_serve.json perf-trajectory artifact; the paged
+# serve subsystem's tests themselves — tests/test_paged_decode.py,
+# test_paged_prefill.py, test_serve_paged.py, test_serve_chunked.py,
+# test_serve_chaos.py — run in the tier-1 pytest above; roofline
+# keeps the static per-kernel FLOP/byte models —
 # ragged-bytes ratios, paged-vs-dense decode bytes, paged-prefill
 # chunk-vs-decode-walk bytes, the EP-a2a vs weight-gather comm
 # crossover — importable and consistent.

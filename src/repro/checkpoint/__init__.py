@@ -1,2 +1,4 @@
-from repro.checkpoint.store import load_tree, save_tree  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    CorruptCheckpointError, load_tree, save_tree,
+)
 from repro.checkpoint.manager import CheckpointManager  # noqa: F401

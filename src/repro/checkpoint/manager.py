@@ -92,16 +92,38 @@ class CheckpointManager:
         )
 
     def restore_latest(self, like: Any, *, shardings: Any = None):
-        """Returns (tree, step, metadata) or (None, None, None)."""
-        step = self.latest_step()
-        if step is None:
-            return None, None, None
-        path = self.step_path(step)
-        return (
-            store.load_tree(path, like, shardings=shardings),
-            step,
-            store.load_metadata(path),
-        )
+        """Returns (tree, step, metadata) or (None, None, None).
+
+        Falls back to the last-known-good step: if the newest COMMITted
+        checkpoint fails to load anyway (torn leaf file from a partial
+        write on a non-fsync filesystem, bit rot, truncation), it is
+        logged and the next-newest valid checkpoint is tried instead of
+        killing the restart loop. Structure/shape mismatches
+        (ValueError) still raise — that is a caller bug, and silently
+        resuming an older incompatible state would hide it.
+        """
+        last_err = None
+        for step in reversed(self.all_steps()):
+            path = self.step_path(step)
+            try:
+                return (
+                    store.load_tree(path, like, shardings=shardings),
+                    step,
+                    store.load_metadata(path),
+                )
+            except ValueError:
+                raise
+            except Exception as e:  # torn/corrupt payload
+                last_err = e
+                print(
+                    f"[checkpoint] step {step} at {path} is corrupt "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    "previous checkpoint"
+                )
+        if last_err is not None:
+            print("[checkpoint] no loadable checkpoint found; "
+                  "starting fresh")
+        return None, None, None
 
     # -- rotation ---------------------------------------------------------
     def _gc(self) -> None:

@@ -10,9 +10,14 @@ A checkpoint is a directory:
                      (crash-consistency marker)
 
 Writes go to ``<dir>.tmp-<pid>`` then ``os.replace`` onto the final name —
-atomic on POSIX — so readers never observe partial checkpoints. Arrays are
-stored device-agnostic (plain numpy + logical axes); restore re-shards
-onto whatever mesh the restoring job uses, which is what makes restarts
+atomic on POSIX — so readers never observe partial checkpoints. Every
+file is fsync'd before COMMIT, COMMIT is fsync'd before the rename, and
+the parent directory is fsync'd after it: a crash or power loss at ANY
+point leaves either the previous checkpoint or the new one, never a
+torn mix (a leftover ``.tmp-*`` directory is garbage, ignored by
+``is_valid`` and rewritten on the next save). Arrays are stored
+device-agnostic (plain numpy + logical axes); restore re-shards onto
+whatever mesh the restoring job uses, which is what makes restarts
 elastic (DESIGN.md §5).
 """
 from __future__ import annotations
@@ -27,6 +32,14 @@ import ml_dtypes  # jax dependency; registers bfloat16 & friends
 import numpy as np
 
 FORMAT_VERSION = 1
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A COMMITted checkpoint whose payload cannot be read anyway
+    (torn leaf file, unreadable manifest — e.g. partial writes on a
+    filesystem that ignored fsync, or bit rot). Distinct from
+    ValueError (structure/shape mismatch = caller bug) so
+    CheckpointManager can fall back to the last-known-good step."""
 
 # numpy's .npy format only round-trips builtin dtypes; extension dtypes
 # (bfloat16, fp8) are stored as a bit-identical unsigned view + the logical
@@ -60,6 +73,29 @@ def _flatten(tree):
     return paths, leaves, treedef
 
 
+def _fsync_file(fpath: str) -> None:
+    fd = os.open(fpath, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(dpath: str) -> None:
+    # Directory fsync durably records renames/creates within it; some
+    # filesystems refuse O_RDONLY-fsync on directories — best effort.
+    try:
+        fd = os.open(dpath, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_tree(path: str, tree, *, metadata: Optional[dict] = None) -> None:
     tmp = f"{path}.tmp-{os.getpid()}"
     if os.path.exists(tmp):
@@ -75,18 +111,31 @@ def save_tree(path: str, tree, *, metadata: Optional[dict] = None) -> None:
         arr = np.asarray(leaf)
         stored, dtype_name = _encode(arr)
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), stored)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, stored)
+        _fsync_file(fpath)
         manifest["leaves"].append(
             {"path": p, "file": fname, "shape": list(arr.shape),
              "dtype": dtype_name}
         )
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
         json.dump(manifest, f)
-    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.flush()
+        os.fsync(f.fileno())
+    # COMMIT is the crash-consistency barrier: every byte it vouches for
+    # is durable before it exists, and it is durable (file + dir fsync)
+    # before the tmp dir can replace a previous valid checkpoint.
+    cpath = os.path.join(tmp, "COMMIT")
+    with open(cpath, "w") as f:
         f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
 
 
 def is_valid(path: str) -> bool:
@@ -108,8 +157,13 @@ def load_tree(path: str, like: Any = None, *, shardings: Any = None):
     """
     if not is_valid(path):
         raise FileNotFoundError(f"no valid checkpoint at {path}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        raise CorruptCheckpointError(
+            f"checkpoint {path}: unreadable manifest ({err})"
+        ) from err
     paths, like_leaves, treedef = _flatten(like)
     by_path = {e["path"]: e for e in manifest["leaves"]}
     if set(paths) != set(by_path):
@@ -126,7 +180,13 @@ def load_tree(path: str, like: Any = None, *, shardings: Any = None):
     out = []
     for p, like_leaf, shard in zip(paths, like_leaves, shard_leaves):
         e = by_path[p]
-        arr = _decode(np.load(os.path.join(path, e["file"])), e["dtype"])
+        try:
+            raw = np.load(os.path.join(path, e["file"]))
+        except Exception as err:  # torn/truncated leaf
+            raise CorruptCheckpointError(
+                f"checkpoint {path}: leaf {e['file']} unreadable ({err})"
+            ) from err
+        arr = _decode(raw, e["dtype"])
         if tuple(arr.shape) != tuple(np.shape(like_leaf)):
             raise ValueError(
                 f"shape mismatch at {p}: ckpt {arr.shape} vs "

@@ -14,6 +14,20 @@ per-admission prefill, ``--chunk-size`` / ``--chunks-per-step`` size
 the prefill token budget, ``--no-prefix-cache`` disables block-level
 prompt-prefix reuse. ``--stream`` prints tokens as they are sampled
 instead of waiting for the full batch.
+
+Robustness knobs (chunked admission; failure-modes table in
+``repro/serve/__init__.py``): ``--queue-limit`` / ``--queue-policy``
+bound the wait queue (block / shed-newest / shed-oldest),
+``--shed-occupancy`` / ``--shed-stall-ticks`` drive occupancy- and
+starvation-triggered load shedding, ``--preempt`` enables
+preempt-and-requeue under pool exhaustion, ``--ttft-deadline`` /
+``--deadline`` set default per-request deadlines in ticks after
+arrival, ``--watchdog-ticks`` bounds zero-progress spins, and
+``--chaos SEED`` arms the seeded fault injector (random evictions,
+pool holds, admission bursts, deadline storms) for soak testing.
+Requests end in exactly one terminal status (completed / shed /
+timeout / failed), printed per request and aggregated in the engine
+stats line.
 """
 from __future__ import annotations
 
@@ -45,12 +59,36 @@ def main() -> None:
                     help="disable block-level prompt-prefix reuse")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated (--paged)")
+    rb = ap.add_argument_group("robustness (chunked admission)")
+    rb.add_argument("--queue-limit", type=int, default=0,
+                    help="max visible waiting requests (0 = unbounded)")
+    rb.add_argument("--queue-policy", default="block",
+                    choices=["block", "shed-newest", "shed-oldest"])
+    rb.add_argument("--shed-occupancy", type=float, default=None,
+                    help="pool-occupancy fraction that triggers shedding")
+    rb.add_argument("--shed-stall-ticks", type=int, default=0,
+                    help="consecutive block-starved ticks that trigger "
+                         "shedding (0 = off)")
+    rb.add_argument("--preempt", action="store_true",
+                    help="preempt-and-requeue lower-priority requests "
+                         "under pool exhaustion")
+    rb.add_argument("--ttft-deadline", type=int, default=None,
+                    help="default first-token deadline (ticks after "
+                         "arrival)")
+    rb.add_argument("--deadline", type=int, default=None,
+                    help="default completion deadline (ticks after "
+                         "arrival)")
+    rb.add_argument("--watchdog-ticks", type=int, default=32,
+                    help="zero-progress ticks before the watchdog fails "
+                         "the stuck head")
+    rb.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm the seeded fault injector")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced
     from repro.models import model_zoo as zoo
     from repro.models import param as pm
-    from repro.serve import Request, ServeConfig, ServeEngine
+    from repro.serve import ChaosConfig, Request, ServeConfig, ServeEngine
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
@@ -65,6 +103,9 @@ def main() -> None:
             params = restored["params"]
             print(f"[serve] loaded checkpoint step {step}")
 
+    chaos = (ChaosConfig(seed=args.chaos, evict_prob=0.1, hold_prob=0.15,
+                         burst_prob=0.1, storm_prob=0.05)
+             if args.chaos is not None else None)
     eng = ServeEngine(
         params, cfg,
         ServeConfig(max_batch=args.max_batch, max_len=256,
@@ -73,7 +114,16 @@ def main() -> None:
                     admission=args.admission,
                     chunk_size=args.chunk_size,
                     chunks_per_step=args.chunks_per_step,
-                    prefix_cache=not args.no_prefix_cache),
+                    prefix_cache=not args.no_prefix_cache,
+                    queue_limit=args.queue_limit,
+                    queue_policy=args.queue_policy,
+                    shed_occupancy=args.shed_occupancy,
+                    shed_stall_ticks=args.shed_stall_ticks,
+                    preempt=args.preempt,
+                    default_ttft_deadline=args.ttft_deadline,
+                    default_deadline=args.deadline,
+                    watchdog_ticks=args.watchdog_ticks,
+                    chaos=chaos),
     )
     demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
     if args.paged:
@@ -87,17 +137,33 @@ def main() -> None:
             (lambda rid, t: print(f"[serve] req{rid} += {t}", flush=True))
             if args.stream else None
         )
-        outs, stats = eng.serve(reqs, on_token=on_token)
+        on_event = (
+            (lambda rid, ev, detail: print(
+                f"[serve] req{rid} event: {ev}"
+                + (f" ({detail})" if detail else ""), flush=True))
+            if args.admission == "chunked" else None
+        )
+        outs, stats = eng.serve(reqs, on_token=on_token,
+                                on_event=on_event)
         for i, p in enumerate(demo):
             s = stats[i]
+            status = s.get("status", "completed")
             print(f"[serve] req{i}: {p} -> {outs[i][len(p):]} "
-                  f"(admitted@{s['admitted_at']} done@{s['finished_at']} "
-                  f"{s['reason']} prefix_hit={s['prefix_tokens']})")
+                  f"({status}/{s['reason']} admitted@{s['admitted_at']} "
+                  f"done@{s['finished_at']} "
+                  f"prefix_hit={s['prefix_tokens']})")
         es = eng.last_stats
+        extra = ""
+        if args.admission == "chunked":
+            extra = (f" status_counts={es['status_counts']} "
+                     f"preemptions={es['preemptions']} "
+                     f"peak_occupancy={es['peak_occupancy']:.2f}")
+            if chaos is not None:
+                extra += f" chaos={es['chaos']}"
         print(f"[serve] engine: mode={es['mode']} "
               f"steps={es['mixed_steps']} "
               f"compile_count={es['compile_count']} "
-              f"prefix_hit_frac={es['prefix_hit_frac']:.2f}")
+              f"prefix_hit_frac={es['prefix_hit_frac']:.2f}" + extra)
         return
     for i, seq in enumerate(eng.generate(demo, max_new=args.max_new)):
         print(f"[serve] req{i}: {demo[i]} -> {seq[len(demo[i]):]}")

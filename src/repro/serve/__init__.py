@@ -70,10 +70,56 @@ Request lifecycle::
               (shared prefix blocks stay for other holders / the
               prefix index), slot admits the next queued request
 
+Failure modes (the robustness layer; all knobs on :class:`ServeConfig`,
+chunked admission only, every path exercised by tests/test_serve_chaos
+and the seeded :class:`ChaosConfig` fault injector; lifecycle events
+stream via ``serve(on_event=...)`` and per-request ``on_event``):
+
+==========  ========================  =======================  ==========
+mode        trigger                   policy                   status
+==========  ========================  =======================  ==========
+overload    visible queue over        ``queue_policy``:        ``shed``
+            ``queue_limit``; pool     ``block`` waits;
+            occupancy >=              ``shed-newest`` /
+            ``shed_occupancy``; head  ``shed-oldest`` drop by
+            block-starved >=          age to the bound, and
+            ``shed_stall_ticks``      refuse arrivals while
+            consecutive ticks         the signal is up
+deadline    no first token by         request evicted (queued  ``timeout``
+            arrival +                 or mid-flight; blocks
+            ``ttft_deadline``; not    freed), reason ``ttft``
+            finished by arrival +     or ``deadline``; checked
+            ``deadline``              once per tick, zero
+                                      extra host syncs
+preemption  pool exhaustion with a    ``preempt=True``: evict  (not
+            strictly-higher-priority  youngest lower-priority  terminal;
+            admission (or a chaos     active slot, register    requeued +
+            eviction)                 its computed blocks in   ``preempt-
+            .                         the prefix index, free   ed-re-
+            .                         + requeue; re-admission  queued``
+            .                         recovers them copy-free  event)
+            .                         so only the uncached
+            .                         tail re-prefills
+watchdog    request footprint >       fail the request with a  ``failed``
+            pool capacity             diagnostic — at
+            (structural), or a        admission for the
+            visible head making       structural case, after
+            zero progress for         ``watchdog_ticks``
+            ``watchdog_ticks``        zero-progress ticks
+            .                         otherwise — instead of
+            .                         spinning forever
+==========  ========================  =======================  ==========
+
+Every submitted request ends in exactly ONE terminal status —
+``completed`` / ``shed`` / ``timeout`` / ``failed`` (in
+``stats[rid]["status"]``; preemptions are counted per request, not
+terminal) — and ``BlockPool.check_invariants`` audits refcounts vs
+block tables at every tick boundary under chaos/test.
+
 ``repro.training.serve`` re-exports :class:`ServeConfig` /
 :class:`ServeEngine` for back-compat.
 """
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import ChaosConfig, ServeConfig, ServeEngine
 from repro.serve.paged_cache import (
     BlockPool,
     PrefixMatch,
@@ -84,6 +130,7 @@ from repro.serve.scheduler import Request, Scheduler, Slot
 
 __all__ = [
     "BlockPool",
+    "ChaosConfig",
     "PrefixMatch",
     "Request",
     "Scheduler",

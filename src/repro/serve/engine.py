@@ -60,6 +60,37 @@ from repro.serve.scheduler import Request, Scheduler
 from repro.sharding import ShardCtx
 
 
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded, deterministic fault injection for the chunked serve loop.
+
+    Every probability is evaluated once per tick from a single
+    ``np.random.default_rng(seed)`` stream, so a (trace, ChaosConfig)
+    pair replays the exact same fault schedule — failures found by the
+    chaos sweep are reproducible by seed. All faults are host-side
+    (scheduler/pool state); the device never sees them except as
+    different admission patterns.
+    """
+
+    seed: int = 0
+    # Random eviction: preempt-and-requeue a random ACTIVE slot.
+    evict_prob: float = 0.0
+    # Pool exhaustion: grab random free blocks for hold_ticks ticks.
+    hold_prob: float = 0.0
+    hold_max_blocks: int = 4
+    hold_ticks: int = 3
+    # Admission burst: inject burst_size synthetic requests at once.
+    burst_prob: float = 0.0
+    burst_size: int = 2
+    burst_plen: int = 12
+    burst_max_new: int = 4
+    burst_priority: int = 0
+    rid_base: int = 1 << 30  # synthetic rids start here — keep real rids below
+    # Deadline storm: clamp every queued request's TTFT deadline.
+    storm_prob: float = 0.0
+    storm_ttft: int = 2
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8
@@ -85,6 +116,33 @@ class ServeConfig:
     chunks_per_step: int = 1  # chunk lanes per mixed step
     # Content-hash prefix reuse across admissions (chunked mode only).
     prefix_cache: bool = True
+    # --- robustness (chunked mode only; all off by default) --------------
+    # Bounded wait queue: max VISIBLE (arrived, unadmitted) requests.
+    # 0 = unbounded. Policy "block" waits indefinitely; "shed-newest" /
+    # "shed-oldest" shed to the bound and while overloaded.
+    queue_limit: int = 0
+    queue_policy: str = "block"
+    # Overload signals driving load shedding (with a shed-* policy):
+    # pool occupancy fraction >= shed_occupancy, or the best visible
+    # request block-starved for >= shed_stall_ticks consecutive ticks.
+    shed_occupancy: Optional[float] = None
+    shed_stall_ticks: int = 0  # 0 = off
+    # Preempt-and-requeue: under pool exhaustion evict the youngest
+    # strictly-lower-priority active request instead of waiting.
+    preempt: bool = False
+    # Default deadlines (ticks after arrival) for requests that don't
+    # set their own; exceeded -> terminal status "timeout".
+    default_ttft_deadline: Optional[int] = None
+    default_deadline: Optional[int] = None
+    # Stuck-tick watchdog: after this many zero-progress ticks with a
+    # visible queue head, fail that request with a diagnostic instead
+    # of spinning forever (a request whose worst-case footprint exceeds
+    # the whole pool fails immediately at admission).
+    watchdog_ticks: int = 32
+    # Run BlockPool.check_invariants at every tick boundary (always on
+    # when chaos is set). Test/debug knob — O(capacity) per tick.
+    audit_invariants: bool = False
+    chaos: Optional[ChaosConfig] = None
 
 
 class ServeEngine:
@@ -127,6 +185,19 @@ class ServeEngine:
                 "chunked admission needs chunk_size >= 1 and "
                 f"chunks_per_step >= 1; got {sc.chunk_size}, "
                 f"{sc.chunks_per_step}"
+            )
+        if sc.paged and sc.admission != "chunked" and (
+            sc.queue_limit or sc.queue_policy != "block"
+            or sc.shed_occupancy is not None or sc.shed_stall_ticks
+            or sc.preempt or sc.default_ttft_deadline is not None
+            or sc.default_deadline is not None or sc.audit_invariants
+            or sc.chaos is not None
+        ):
+            raise ValueError(
+                "robustness features (backpressure / deadlines / "
+                "preemption / chaos / audits) require "
+                "admission='chunked'; prefill_on_join is the frozen "
+                "pre-chunking baseline"
             )
         self.params, self.cfg, self.sc, self.ac, self.ctx = (
             params, cfg, sc, ac, ctx
@@ -255,32 +326,39 @@ class ServeEngine:
         requests: list[Request],
         *,
         on_token: Optional[Callable[[int, int], None]] = None,
+        on_event: Optional[Callable[[int, str, str], None]] = None,
         rng=None,
     ):
         """Run a continuous-batching session over ``requests``.
 
         Requests become visible at their ``arrival`` tick; admission is
-        FCFS into free slots. With ``admission="chunked"`` (default)
-        each tick is ONE jitted mixed step — decode rows plus prefill
-        chunk lanes — and prompt prefixes already in the pool are
-        reused copy-free; ``admission="prefill_on_join"`` runs the
+        priority-then-FCFS into free slots. With ``admission="chunked"``
+        (default) each tick is ONE jitted mixed step — decode rows plus
+        prefill chunk lanes — and prompt prefixes already in the pool
+        are reused copy-free; ``admission="prefill_on_join"`` runs the
         pre-chunking per-admission B=1 prefill instead. Tokens stream
         through ``on_token(rid, token)`` (and each request's own
-        ``on_token``) the moment they are sampled.
+        ``on_token``) the moment they are sampled; lifecycle events
+        (``admitted`` / ``re-admitted`` / ``preempted-requeued`` /
+        ``completed`` / ``shed`` / ``timeout`` / ``failed``) stream
+        through ``on_event(rid, event, detail)`` (chunked mode).
 
         Returns ``(outputs, stats)``: ``outputs[rid]`` is the full
         prompt + generated sequence (EOS included when hit);
         ``stats[rid]`` records arrival / admission / first-token /
-        finish ticks, generated count, prefix-cached prompt tokens and
-        the finish reason. Engine-level counters (compile counts,
-        prefix hit rate, per-tick wall clocks) land in
+        finish ticks, generated count, prefix-cached prompt tokens, the
+        terminal ``status`` (completed | shed | timeout | failed), the
+        detail ``reason`` and the ``preemptions`` count — EVERY
+        submitted request gets exactly one terminal record. Engine
+        counters (compile counts, prefix hit rate, per-tick wall
+        clocks, shed/timeout/preempt/watchdog totals) land in
         ``self.last_stats``.
         """
         if not self.sc.paged:
             raise ValueError("serve() needs ServeConfig(paged=True)")
         if self.sc.admission == "chunked":
             return self._serve_chunked(requests, on_token=on_token,
-                                       rng=rng)
+                                       on_event=on_event, rng=rng)
         return self._serve_prefill_on_join(requests, on_token=on_token,
                                            rng=rng)
 
@@ -294,7 +372,23 @@ class ServeEngine:
             num_blocks, bs,
             prefix_cache=sc.prefix_cache and sc.admission == "chunked",
         )
-        sched = Scheduler(sc.max_batch, pool, sc.max_len)
+        if sc.admission == "chunked":
+            sched = Scheduler(
+                sc.max_batch, pool, sc.max_len,
+                queue_limit=sc.queue_limit,
+                queue_policy=sc.queue_policy,
+                shed_occupancy=sc.shed_occupancy,
+                shed_stall_ticks=sc.shed_stall_ticks,
+                preempt=sc.preempt,
+                default_ttft_deadline=sc.default_ttft_deadline,
+                default_deadline=sc.default_deadline,
+                # The watchdog (not a submit-time raise) owns the
+                # oversized-request failure path in chunked mode, so
+                # every submitted request gets a terminal status.
+                reject_oversized=False,
+            )
+        else:
+            sched = Scheduler(sc.max_batch, pool, sc.max_len)
         for r in requests:
             sched.submit(r)
         rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -345,12 +439,13 @@ class ServeEngine:
 
     # -- chunked mixed-step loop (the paged default) --------------------
 
-    def _serve_chunked(self, requests, *, on_token, rng):
+    def _serve_chunked(self, requests, *, on_token, on_event, rng):
         sc = self.sc
         bs = sc.block_size
         B, NC, C = sc.max_batch, sc.chunks_per_step, sc.chunk_size
         pool, sched, seed0, cache, nb, _ = self._session(requests, rng)
         outs, emit = self._emitter(requests, on_token)
+        req_map = {r.rid: r for r in requests}
 
         slot_tables = np.zeros((B, nb), np.int32)  # real per-slot tables
         lengths = np.zeros((B,), np.int32)  # tokens in cache per slot
@@ -362,6 +457,8 @@ class ServeEngine:
         cstart = np.zeros((NC,), np.int32)
         clen = np.zeros((NC,), np.int32)
 
+        chaos = sc.chaos
+        audit = sc.audit_invariants or chaos is not None
         stats = {
             "mode": "chunked",
             "mixed_steps": 0,
@@ -371,7 +468,19 @@ class ServeEngine:
             "prompt_tokens": 0,
             "chunk_rows_used": 0,
             "tick_wall": {},
+            # -- robustness observability --------------------------------
+            "events": [],  # (tick, rid, event, detail)
+            "preemptions": 0,
+            "watchdog_failures": 0,
+            "status_counts": {},  # terminal status -> count (at drain)
+            "peak_occupancy": 0.0,
+            "stall_ticks_max": 0,  # longest block-starved head streak
+            "audits": 0,
         }
+        if chaos is not None:
+            stats["chaos"] = {"evictions": 0, "holds": 0,
+                              "held_blocks": 0, "bursts": 0,
+                              "burst_reqs": 0, "storms": 0}
         self.last_stats = stats
         compiled = 0
 
@@ -381,14 +490,110 @@ class ServeEngine:
             cur[i, 0] = 0
 
         maybe_finish = self._finisher(sched, clear_slot)
+        # Forced evictions (preempt / timeout) must clear the victim's
+        # host-side lanes exactly like a normal finish does.
+        sched.on_evict = lambda slot: clear_slot(slot.index)
+
+        def seq_of(rid):
+            # Full sequence so far (prompt + generated) — what a
+            # preempted victim must re-prefill, and what its computed
+            # blocks are registered under for copy-free recovery.
+            return outs[rid]
+
+        ev_cursor = 0
+
+        def dispatch_events():
+            """Drain scheduler lifecycle events into stats + streaming
+            callbacks; returns how many fired (the progress signal for
+            the watchdog — sheds/timeouts ARE progress)."""
+            nonlocal ev_cursor
+            new = sched.events[ev_cursor:]
+            ev_cursor = len(sched.events)
+            for tick, rid, ev, detail in new:
+                stats["events"].append((tick, rid, ev, detail))
+                if ev == "preempted-requeued":
+                    stats["preemptions"] += 1
+                elif ev == "failed":
+                    stats["watchdog_failures"] += 1
+                if on_event is not None:
+                    on_event(rid, ev, detail)
+                req = req_map.get(rid)
+                if req is not None and req.on_event is not None:
+                    req.on_event(rid, ev, detail)
+            return len(new)
+
+        crng = (np.random.default_rng(chaos.seed)
+                if chaos is not None else None)
+        holds: list[list] = []  # [release_tick, blocks]
+
+        def chaos_tick(step):
+            cs = stats["chaos"]
+            for h in holds[:]:
+                if step >= h[0]:
+                    pool.free(h[1])
+                    holds.remove(h)
+            if chaos.evict_prob and crng.random() < chaos.evict_prob:
+                victims = sched.active
+                if victims:
+                    v = victims[int(crng.integers(len(victims)))]
+                    sched.preempt_slot(v, step, seq_of)
+                    cs["evictions"] += 1
+            if chaos.hold_prob and crng.random() < chaos.hold_prob:
+                avail = pool.num_free
+                if avail > 0:
+                    k = int(crng.integers(
+                        1, min(chaos.hold_max_blocks, avail) + 1
+                    ))
+                    blks = pool.alloc(k)
+                    if blks is not None:
+                        holds.append([step + chaos.hold_ticks, blks])
+                        cs["holds"] += 1
+                        cs["held_blocks"] += k
+            if chaos.burst_prob and crng.random() < chaos.burst_prob:
+                cs["bursts"] += 1
+                for _ in range(chaos.burst_size):
+                    rid = chaos.rid_base + cs["burst_reqs"]
+                    cs["burst_reqs"] += 1
+                    prompt = [int(t) for t in
+                              crng.integers(1, 97, size=chaos.burst_plen)]
+                    breq = Request(
+                        rid=rid, prompt=prompt,
+                        max_new=chaos.burst_max_new, arrival=step,
+                        priority=chaos.burst_priority,
+                    )
+                    outs[rid] = list(prompt)
+                    req_map[rid] = breq
+                    sched.submit(breq)
+            if chaos.storm_prob and crng.random() < chaos.storm_prob:
+                if sched.storm_deadlines(step, chaos.storm_ttft):
+                    cs["storms"] += 1
+
+        def tick_audit():
+            if audit:
+                pool.check_invariants(
+                    [s.blocks for s in sched.active]
+                    + [h[1] for h in holds]
+                )
+                stats["audits"] += 1
 
         step = 0
+        stuck = 0
         while sched.has_work:
             stats["tick_wall"].setdefault(step, time.perf_counter())
+            if crng is not None:
+                chaos_tick(step)
+            # -- robustness sweeps: deadlines, then backpressure — pure
+            # host bookkeeping, once per tick, no device syncs.
+            occ = (pool.capacity - pool.num_free) / pool.capacity
+            stats["peak_occupancy"] = max(stats["peak_occupancy"], occ)
+            sched.expire(step)
+            sched.enforce(step, occ)
             # -- admission: slots + blocks, shared prefix mapped
-            # copy-free; CoW partial tails copied device-side.
-            for slot in sched.admit(step):
-                i, req = slot.index, slot.request
+            # copy-free; CoW partial tails copied device-side. May
+            # preempt-and-requeue lower-priority actives (preempt=True).
+            admitted = sched.admit(step, seq_of=seq_of)
+            for slot in admitted:
+                i = slot.index
                 slot_tables[i, :] = 0
                 slot_tables[i, :len(slot.blocks)] = slot.blocks
                 if slot.cow is not None:
@@ -401,15 +606,21 @@ class ServeEngine:
                     slot.cow = None
                 lengths[i] = slot.length
                 stats["prefix_hit_tokens"] += slot.prefix_tokens
-                stats["prompt_tokens"] += len(req.prompt)
+                stats["prompt_tokens"] += len(slot.eff_prompt)
+            stats["stall_ticks_max"] = max(
+                stats["stall_ticks_max"], sched.stall_ticks
+            )
+            progress = dispatch_events() > 0
 
             # -- chunk-lane assignment: strict FCFS over prefilling
             # slots; one slot may take several lanes in one tick (its
             # later chunks attend the earlier ones' in-step writes).
+            # eff_prompt (prompt + recovered generated tokens after a
+            # preemption) is what needs to be in the cache.
             chunks = []  # (slot, start, ntok)
             planned = {}
             for slot in sched.prefilling():
-                plen = len(slot.request.prompt)
+                plen = len(slot.eff_prompt)
                 pos = planned.get(slot.index, slot.length)
                 while len(chunks) < NC and pos < plen:
                     n = min(C, plen - pos)
@@ -424,8 +635,36 @@ class ServeEngine:
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
+                # -- stuck-tick watchdog: a visible head that nothing
+                # will ever unblock (chaos holds, block starvation with
+                # no preemptible victim) must fail with a diagnostic,
+                # not spin the clock forever. Sheds/timeouts/admissions
+                # this tick count as progress.
+                if progress or nxt > step:
+                    stuck = 0
+                else:
+                    stuck += 1
+                    if stuck >= max(1, sc.watchdog_ticks):
+                        free_slots = sum(
+                            1 for s in sched.slots if s.request is None
+                        )
+                        diag = (
+                            f"no progress for {stuck} ticks: "
+                            f"free_blocks={pool.num_free}/"
+                            f"{pool.capacity}, free_slots={free_slots}, "
+                            f"queued={len(sched.queue)}, "
+                            f"preempt={sc.preempt}"
+                        )
+                        if not sched.fail_stuck(step, diag):
+                            raise RuntimeError(
+                                f"serve watchdog wedged: {diag}"
+                            )
+                        dispatch_events()
+                        stuck = 0
+                tick_audit()
                 step = max(step + 1, nxt)  # idle: fast-forward the clock
                 continue
+            stuck = 0
 
             # -- build the fixed-shape lanes. Non-decoding slots are
             # masked out of the decode lane (zero table row, length 0 ->
@@ -440,7 +679,7 @@ class ServeEngine:
             cstart[:] = 0
             clen[:] = 0
             for ci, (slot, start, n) in enumerate(chunks):
-                ctoks[ci, :n] = slot.request.prompt[start:start + n]
+                ctoks[ci, :n] = slot.eff_prompt[start:start + n]
                 ctab[ci] = slot_tables[slot.index]
                 cstart[ci] = start
                 clen[ci] = n
@@ -461,19 +700,23 @@ class ServeEngine:
             lg_host = np.asarray(logits)  # ONE host sync per mixed step
 
             # -- chunk bookkeeping first: lengths advance, prefix blocks
-            # register, completed prompts sample their first token.
+            # register, completed prompts sample their next token (the
+            # FIRST token for fresh admissions; for re-admitted
+            # preemption victims, the continuation at index generated).
             for ci, (slot, start, n) in enumerate(chunks):
                 i, req = slot.index, slot.request
                 slot.length = start + n
                 lengths[i] = slot.length
                 slot.reg_blocks, slot.reg_parent = pool.register_prefix(
-                    req.prompt, slot.blocks, slot.length,
+                    slot.eff_prompt, slot.blocks, slot.length,
                     start_block=slot.reg_blocks, parent=slot.reg_parent,
                 )
-                if slot.length == len(req.prompt):
-                    slot.first_token_at = step
+                if slot.length == len(slot.eff_prompt):
+                    if not slot.first_done:
+                        slot.first_token_at = step
+                        slot.first_done = True
                     tok = self._sample_one(lg_host[B + ci], seed0,
-                                           req.rid, 0)
+                                           req.rid, slot.generated)
                     emit(req, slot, tok)
                     if not maybe_finish(slot, tok, step):
                         slot.decoding = True
@@ -481,6 +724,8 @@ class ServeEngine:
 
             # -- decode bookkeeping
             for slot in decoding:
+                if slot.request is None:
+                    continue  # evicted this tick (deadline / chaos)
                 i, req = slot.index, slot.request
                 slot.length += 1  # cur token entered the cache
                 lengths[i] += 1
@@ -489,12 +734,30 @@ class ServeEngine:
                 emit(req, slot, tok)
                 if not maybe_finish(slot, tok, step):
                     cur[i, 0] = tok
+            tick_audit()
 
+        # -- drain: release chaos holds, flush events, audit, and check
+        # every submitted request reached exactly one terminal status.
+        for h in holds:
+            pool.free(h[1])
+        holds.clear()
+        dispatch_events()
+        if audit:
+            pool.check_invariants([])
+            stats["audits"] += 1
+        counts: dict = {}
+        for rec in sched.finished.values():
+            counts[rec["status"]] = counts.get(rec["status"], 0) + 1
+        stats["status_counts"] = counts
         stats["compile_count"] = self._mixed_step._cache_size()
         stats["prefix_hit_frac"] = (
             stats["prefix_hit_tokens"] / max(stats["prompt_tokens"], 1)
         )
         assert pool.num_free == pool.capacity, "leaked KV blocks"
+        missing = set(outs) - set(sched.finished)
+        assert not missing, (
+            f"requests without a terminal status: {sorted(missing)}"
+        )
         return outs, sched.finished
 
     # -- prefill-on-join loop (pre-chunking baseline) -------------------

@@ -277,3 +277,86 @@ class BlockPool:
                 self._children.setdefault(parent, []).append((toks, b))
             parent = chain
         return max(n, start_block), parent
+
+    # -- fault-injection audit -------------------------------------------
+
+    def check_invariants(self, holders=None) -> None:
+        """Audit the pool's internal consistency; raises AssertionError
+        with a full diagnostic on any violation. Called at tick
+        boundaries by the chaos/robustness harness — O(capacity), pure
+        host state, no device work.
+
+        ``holders``: optional iterable of block-id collections (one per
+        live owner — slot block tables, chaos block holds). When given,
+        per-block refcounts must equal the number of holder lists that
+        contain the block, i.e. refcount sums match the block tables.
+        """
+        errs = []
+        free_s = set(self._free)
+        cached_s = set(self._free_cached)
+        live_s = set(self._refs)
+        if len(free_s) != len(self._free):
+            errs.append(f"duplicate ids on the free list: {self._free}")
+        if len(cached_s) != len(self._free_cached):
+            errs.append(
+                f"duplicate ids on the cached-free list: "
+                f"{self._free_cached}"
+            )
+        for name, s in (("free", free_s), ("cached-free", cached_s),
+                        ("live", live_s)):
+            if TRASH_BLOCK in s:
+                errs.append(f"trash block {TRASH_BLOCK} on the {name} list")
+        for a, b, what in (
+            (free_s, cached_s, "free ∩ cached-free"),
+            (free_s, live_s, "live block on the free list"),
+            (cached_s, live_s, "live block on the cached-free list"),
+        ):
+            both = a & b
+            if both:
+                errs.append(f"{what}: {sorted(both)}")
+        every = free_s | cached_s | live_s
+        want = set(range(1, self.num_blocks))
+        if every != want:
+            leaked = sorted(want - every)
+            phantom = sorted(every - want)
+            if leaked:
+                errs.append(f"leaked blocks (nowhere at all): {leaked}")
+            if phantom:
+                errs.append(f"out-of-range blocks tracked: {phantom}")
+        bad_refs = {b: c for b, c in self._refs.items() if c < 1}
+        if bad_refs:
+            errs.append(f"non-positive refcounts: {bad_refs}")
+        if holders is not None:
+            counts: dict[int, int] = {}
+            for hold in holders:
+                for b in hold:
+                    counts[b] = counts.get(b, 0) + 1
+            if counts != self._refs:
+                errs.append(
+                    f"refcounts {dict(sorted(self._refs.items()))} != "
+                    f"block-table holds {dict(sorted(counts.items()))}"
+                )
+        # Index consistency: cached-free blocks must still be indexed
+        # (free() routes unindexed blocks to the plain list), the
+        # hash<->block maps must agree, and every indexed block must
+        # appear under its parent's children.
+        stale = cached_s - set(self._block_meta)
+        if stale:
+            errs.append(f"cached-free blocks without index meta: "
+                        f"{sorted(stale)}")
+        for b, (chain, parent, toks) in self._block_meta.items():
+            if self._by_hash.get(chain) != b:
+                errs.append(
+                    f"block {b}: _by_hash[{chain[:12]}…] = "
+                    f"{self._by_hash.get(chain)}"
+                )
+            if (toks, b) not in self._children.get(parent, ()):
+                errs.append(f"block {b} missing from parent's children")
+        for chain, b in self._by_hash.items():
+            if b not in self._block_meta:
+                errs.append(f"_by_hash entry {chain[:12]}… -> {b} has "
+                            "no block meta")
+        if errs:
+            raise AssertionError(
+                "BlockPool invariant violation:\n  " + "\n  ".join(errs)
+            )

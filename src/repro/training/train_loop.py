@@ -40,6 +40,13 @@ class TrainConfig:
     max_to_keep: int = 3
     # straggler watchdog: warn when a step takes > factor * median
     straggler_factor: float = 3.0
+    # Non-finite loss guard: a NaN/inf loss or grad norm skips the
+    # optimizer update (params/opt state/residual keep their old
+    # values, the step counter still advances — MoE router blowups are
+    # the classic upcycling fine-tune failure); the Trainer aborts with
+    # a clear error after this many CONSECUTIVE skips. 0 disables the
+    # guard entirely (step applies whatever it computed).
+    max_consecutive_skips: int = 10
 
 
 def make_train_step(
@@ -109,16 +116,38 @@ def make_train_step(
             grads, state["opt_state"], params
         )
         new_params = apply_updates(params, updates)
+        mets = dict(mets)
+        grad_norm = global_norm(grads)
+        mets["grad_norm"] = grad_norm
+        if tc.max_consecutive_skips > 0:
+            # Non-finite guard: keep the OLD params/opt state/residual
+            # when the loss or grad norm blew up — all inside the jitted
+            # step (jnp.where), zero extra host syncs; the Trainer reads
+            # mets["skipped"] off the metrics it already pulls.
+            ok = jnp.isfinite(mets["loss"]) & jnp.isfinite(grad_norm)
+
+            def pick(new, old):
+                return jax.tree.map(
+                    lambda a, b: jnp.where(ok, a, b), new, old
+                )
+
+            new_params = pick(new_params, params)
+            opt_state = pick(opt_state, state["opt_state"])
+            if residual is not None and "residual" in state:
+                residual = pick(residual, state["residual"])
+            mets["skipped"] = (~ok).astype(jnp.float32)
+        else:
+            mets["skipped"] = jnp.zeros((), jnp.float32)
         new_state = dict(state)
         new_state.update(
             params=new_params,
             opt_state=opt_state,
+            # The step counter tracks consumed batches, so checkpoint /
+            # resume bookkeeping is oblivious to skipped updates.
             step=state["step"] + 1,
         )
         if residual is not None:
             new_state["residual"] = residual
-        mets = dict(mets)
-        mets["grad_norm"] = global_norm(grads)
         return new_state, mets
 
     return train_step
@@ -241,6 +270,8 @@ class Trainer:
         )
         mets = {}
         start_step = int(state["step"])
+        skipped_steps = 0
+        consecutive_skips = 0
         for i in range(start_step, num_steps):
             batch = next(self.data)
             t0 = time.perf_counter()
@@ -248,6 +279,32 @@ class Trainer:
             jax.block_until_ready(mets["loss"])
             dt = time.perf_counter() - t0
             self._watchdog(i, dt)
+            # Non-finite guard bookkeeping: "skipped" rides the metrics
+            # pull the loop already blocks on — no extra syncs.
+            if float(mets.get("skipped", 0.0)) > 0:
+                skipped_steps += 1
+                consecutive_skips += 1
+                self.log_fn(
+                    f"[trainer] step {i + 1} SKIPPED non-finite update "
+                    f"(loss={float(mets['loss'])}, "
+                    f"grad_norm={float(mets['grad_norm'])}; "
+                    f"{consecutive_skips} consecutive)"
+                )
+                if (self.tc.max_consecutive_skips > 0
+                        and consecutive_skips
+                        >= self.tc.max_consecutive_skips):
+                    raise RuntimeError(
+                        f"training diverged: {consecutive_skips} "
+                        "consecutive non-finite losses (last loss="
+                        f"{float(mets['loss'])}, grad_norm="
+                        f"{float(mets['grad_norm'])}) — lower the "
+                        "learning rate, raise router z-loss, or resume "
+                        "from the last checkpoint with a different "
+                        "data seed"
+                    )
+            else:
+                consecutive_skips = 0
+            mets["skipped_steps"] = skipped_steps
             if (i + 1) % self.tc.log_every == 0:
                 self.log_fn(
                     f"[trainer] step {i + 1} loss={float(mets['loss']):.4f} "

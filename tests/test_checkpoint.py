@@ -83,3 +83,54 @@ def test_async_save(tmp_path):
     m.save_async(2, t)
     m.wait()
     assert m.latest_step() == 2
+
+
+def test_crash_mid_write_keeps_previous(tmp_path):
+    """Crash simulation: a writer dies with a half-written tmp dir —
+    the previous checkpoint still loads and the next save succeeds."""
+    t = tree()
+    p = str(tmp_path / "ckpt")
+    save_tree(p, t, metadata={"step": 1})
+    # a second writer crashed mid-write: tmp dir exists, leaf truncated,
+    # no COMMIT, never renamed
+    tmp = f"{p}.tmp-{os.getpid()}"
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "leaf_00000.npy"), "wb") as f:
+        f.write(b"\x93NUMPY")  # torn npy header
+    assert store.is_valid(p)
+    out = load_tree(p, t)
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(t["a"])
+    )
+    # the stale tmp dir does not break the next save
+    save_tree(p, t, metadata={"step": 2})
+    assert store.load_metadata(p)["step"] == 2
+
+
+def test_manager_falls_back_to_last_known_good(tmp_path):
+    """A COMMITted checkpoint whose payload is torn anyway (truncated
+    leaf) is skipped: restore_latest falls back to the older step."""
+    m = CheckpointManager(str(tmp_path), max_to_keep=5)
+    t = tree()
+    m.save(3, t)
+    m.save(7, t)
+    # corrupt the newest: truncate a leaf file AFTER commit
+    leaf = os.path.join(m.step_path(7), "leaf_00000.npy")
+    with open(leaf, "wb") as f:
+        f.write(b"\x93NU")
+    assert m.latest_step() == 7  # still COMMITted...
+    out, step, meta = m.restore_latest(t)
+    assert step == 3  # ...but restore lands on the last-known-good
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(t["a"])
+    )
+
+
+def test_manager_structure_mismatch_still_raises(tmp_path):
+    """The fallback is for torn payloads only — a structure mismatch is
+    a caller bug and must not silently resume an older checkpoint."""
+    m = CheckpointManager(str(tmp_path), max_to_keep=5)
+    t = tree()
+    m.save(3, t)
+    with pytest.raises(ValueError):
+        m.restore_latest({"a": t["a"]})

@@ -88,6 +88,59 @@ def test_preemption_saves_and_exits(cfg, tmp_path):
     assert tr.manager.latest_step() == int(out["state"]["step"])
 
 
+def _nan_params(cfg, opt):
+    s = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    return jax.tree.map(lambda p: jnp.full_like(p, jnp.nan), s["params"])
+
+
+def test_nonfinite_guard_skips_update(cfg):
+    """NaN loss: params/opt state keep their old values, the step
+    counter still advances, mets['skipped'] flags the tick."""
+    opt = sgd(constant(0.1), momentum=0.0)
+    batch = _batch(cfg, B=4)
+    step = jax.jit(make_train_step(cfg, opt, tc=TrainConfig()))
+    # healthy step: not skipped
+    s0 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    _, m_ok = step(s0, batch)
+    assert float(m_ok["skipped"]) == 0.0
+    # poisoned params -> non-finite loss -> update dropped wholesale
+    bad = init_train_state(
+        jax.random.PRNGKey(0), cfg, opt, params=_nan_params(cfg, opt)
+    )
+    s1, m = step(bad, batch)
+    assert float(m["skipped"]) == 1.0
+    assert not np.isfinite(float(m["loss"]))
+    for a, b in zip(jax.tree.leaves(bad["params"]),
+                    jax.tree.leaves(s1["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(bad["opt_state"]),
+                    jax.tree.leaves(s1["opt_state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(s1["step"]) == 1  # batches consumed, update skipped
+
+
+def test_trainer_counts_and_aborts_on_skips(cfg, tmp_path):
+    opt = sgd(constant(0.1), momentum=0.0)
+    it = make_iterator(cfg, global_batch=4, seq_len=32, host_index=0,
+                       host_count=1)
+    tc = TrainConfig(checkpoint_every=1000, log_every=1000,
+                     max_consecutive_skips=5)
+    tr = Trainer(cfg, opt, it, str(tmp_path / "a"), tc=tc,
+                 log_fn=lambda s: None)
+    out = tr.run(2, init_params=_nan_params(cfg, opt))
+    assert out["metrics"]["skipped_steps"] == 2
+    # below the abort threshold -> ran to completion
+    assert int(out["state"]["step"]) == 2
+    tc2 = TrainConfig(checkpoint_every=1000, log_every=1000,
+                      max_consecutive_skips=3)
+    it2 = make_iterator(cfg, global_batch=4, seq_len=32, host_index=0,
+                        host_count=1)
+    tr2 = Trainer(cfg, opt, it2, str(tmp_path / "b"), tc=tc2,
+                  log_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="consecutive non-finite"):
+        tr2.run(10, init_params=_nan_params(cfg, opt))
+
+
 def test_compression_in_train_step(cfg):
     opt = adafactor(constant(1e-3))
     tc = TrainConfig(compression="bf16")
