@@ -288,6 +288,61 @@ def moe_comm_rows() -> list[tuple[str, float, str]]:
     return rows
 
 
+def speculative_rows() -> list[tuple[str, float, str]]:
+    """Draft-FLOPs vs verify-bytes model of the speculative serving
+    tick (serve/speculative.py), per decode tick, bf16.
+
+    Decode is memory-bound: a target step streams the weight set W_t
+    once however many rows ride it, so the (k+1)-position verify pass
+    costs ~one decode step of HBM time — its FLOPs grow with k+1 but
+    stay far under the ridge (the kernel.speculative.verify rows make
+    that explicit). A speculative tick is (k+1) draft steps + 1 verify
+    = ``1 + (k+1) * r`` step units, ``r = W_draft / W_target``, and
+    emits ``E[a] = (1 - a^(k+1)) / (1 - a)`` tokens at per-token
+    acceptance a; speedup = E[a] / cost. Break-even is the a* with
+    E[a*] = cost — below it, drafting LOSES time. The dense parent of
+    the comm.moe.* reference layer has r ~= 1/E on the FFN (it reads
+    one expert's weights where the MoE streams all E under batching);
+    a top1 draft still streams ~every expert (r ~= 1), which is why it
+    treads water in serve_bench's speculative scenario unless routing
+    locality is measured to be high.
+    """
+    d, f, E = 2048, 5632, 8  # the comm.moe.* reference MoE layer
+    attn = 4 * d * d  # q/k/v/o projections
+    w_target = 3 * E * d * f + attn + E * d  # experts + attn + router
+    w_draft = 3 * d * f + attn  # dense parent: one expert's MLP
+    r = w_draft / w_target
+    rows = []
+    for k in (2, 4, 8):
+        # the verify pass itself: batch of one slot, k+1 positions
+        rows.append(_roofline_row(
+            f"roofline/kernel.speculative.verify.k{k}",
+            2 * w_target * (k + 1),
+            w_target * 2,
+        ))
+        cost = 1 + (k + 1) * r  # tick cost in target-step units
+
+        def exp_tokens(a, k=k):
+            return (k + 1) if a >= 1.0 else (1 - a ** (k + 1)) / (1 - a)
+
+        lo, hi = 0.0, 1.0  # E[a] is monotone: bisect E[a*] = cost
+        for _ in range(60):
+            mid = (lo + hi) / 2
+            lo, hi = (mid, hi) if exp_tokens(mid) < cost else (lo, mid)
+        a_star = (lo + hi) / 2
+        grid = " ".join(
+            f"a={a}:{exp_tokens(a) / cost:.2f}x"
+            for a in (0.5, 0.7, 0.9)
+        )
+        rows.append((
+            f"roofline/comm.speculative.k{k}",
+            cost * w_target * 2 / HBM_BW * 1e6,  # tick HBM time
+            f"draft_ratio={r:.3f} tick_cost={cost:.2f}steps "
+            f"speedup[{grid}] breakeven_acceptance={a_star:.2f}",
+        ))
+    return rows
+
+
 def load(pattern: str = "*") -> list[dict]:
     out = []
     for f in sorted(glob.glob(os.path.join(ART, f"{pattern}.json"))):
@@ -327,4 +382,5 @@ def run() -> list[tuple[str, float, str]]:
         ))
     rows.extend(kernel_rooflines())
     rows.extend(moe_comm_rows())
+    rows.extend(speculative_rows())
     return rows

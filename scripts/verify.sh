@@ -41,6 +41,15 @@ echo "[verify] chaos lane: fault-injection sweep (REPRO_CHAOS=1, wider seeds)"
 # every verify exercises the robustness layer harder than CI-minimum.
 REPRO_CHAOS=1 python -m pytest -x -q tests/test_serve_chaos.py
 
+echo "[verify] spec lane: speculative parity sweep (REPRO_SPEC=1, wider seeds)"
+# tests/test_speculative.py runs in tier-1 above with one rng per
+# parity check; REPRO_SPEC=1 widens the acceptance/identity seed sweep
+# (greedy spec == greedy vanilla for every draft kind, the q == p
+# rejection-sampling identity at temperature on an upcycled
+# checkpoint, chaos + speculation keeping pool invariants green) the
+# way REPRO_CHAOS widens the fault-injection sweep.
+REPRO_SPEC=1 python -m pytest -x -q tests/test_speculative.py
+
 echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
@@ -51,7 +60,10 @@ echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # arrival trace PLUS the long-prompt bursty scenario comparing static /
 # prefill-on-join / chunked-mixed-step admission (wall-clock TTFT,
 # decode stalls, prefix-cache hit rate) AND the overload scenario
-# (~2x sustainable arrival rate, shedding + TTFT deadlines) that
+# (~2x sustainable arrival rate, shedding + TTFT deadlines) AND the
+# speculative scenario (--draft none vs dense vs top1 on an upcycled
+# checkpoint: the dense parent drafts at ~1.0 acceptance and must beat
+# vanilla decode tokens/s by >= 1.3x at smoke scale, >= 2x full) that
 # writes the BENCH_serve.json perf-trajectory artifact; the paged
 # serve subsystem's tests themselves — tests/test_paged_decode.py,
 # test_paged_prefill.py, test_serve_paged.py, test_serve_chunked.py,

@@ -12,8 +12,13 @@ tick carrying decode rows + prefill chunk lanes, prefix caching across
 admissions); ``--admission prefill_on_join`` selects the pre-chunking
 per-admission prefill, ``--chunk-size`` / ``--chunks-per-step`` size
 the prefill token budget, ``--no-prefix-cache`` disables block-level
-prompt-prefix reuse. ``--stream`` prints tokens as they are sampled
-instead of waiting for the full batch.
+prompt-prefix reuse. ``--draft dense`` (or ``top1``) turns on
+speculative decoding — the dense parent sliced out of the (upcycled)
+checkpoint drafts ``--spec-k`` tokens per slot and the MoE verifies
+them in one mixed-step pass, exactly preserving the output
+distribution (acceptance stats land in the engine line). ``--stream``
+prints tokens as they are sampled instead of waiting for the full
+batch.
 
 Robustness knobs (chunked admission; failure-modes table in
 ``repro/serve/__init__.py``): ``--queue-limit`` / ``--queue-policy``
@@ -57,6 +62,13 @@ def main() -> None:
                     help="prefill chunk lanes per mixed step")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable block-level prompt-prefix reuse")
+    ap.add_argument("--draft", default="none",
+                    choices=["none", "dense", "top1"],
+                    help="speculative decoding draft model: the dense "
+                         "parent sliced from the MoE checkpoint, or a "
+                         "top-1 routing truncation (chunked admission)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per verify pass (--draft)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated (--paged)")
     rb = ap.add_argument_group("robustness (chunked admission)")
@@ -115,6 +127,7 @@ def main() -> None:
                     chunk_size=args.chunk_size,
                     chunks_per_step=args.chunks_per_step,
                     prefix_cache=not args.no_prefix_cache,
+                    draft=args.draft, spec_k=args.spec_k,
                     queue_limit=args.queue_limit,
                     queue_policy=args.queue_policy,
                     shed_occupancy=args.shed_occupancy,
@@ -160,6 +173,11 @@ def main() -> None:
                      f"peak_occupancy={es['peak_occupancy']:.2f}")
             if chaos is not None:
                 extra += f" chaos={es['chaos']}"
+        if args.draft != "none":
+            extra += (f" draft={args.draft} spec_k={args.spec_k} "
+                      f"acceptance_rate={es['acceptance_rate']:.2f} "
+                      f"drafted={es['spec_drafted']} "
+                      f"accepted={es['spec_accepted']}")
         print(f"[serve] engine: mode={es['mode']} "
               f"steps={es['mixed_steps']} "
               f"compile_count={es['compile_count']} "

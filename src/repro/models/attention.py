@@ -37,12 +37,25 @@ class MixedMeta:
     lane). Per-row absolute positions travel as ``cache_index`` and
     per-row block tables as ``block_tables`` — this object only adds
     what cannot be derived from them.
+
+    Speculative verify lanes extend the layout to ``R = num_decode +
+    num_verify * verify_tokens + num_chunks * chunk_tokens``: rows
+    ``[num_decode : num_decode + num_verify * verify_tokens]`` are
+    ``num_verify`` verify lanes of ``verify_tokens`` consecutive
+    positions each (pending token + k drafted tokens of one slot),
+    attention-wise identical to chunk lanes — multi-query rows against
+    the slot's block table, each row attending pool positions <= its
+    own. ``verify_lens`` (NV,) counts valid rows per lane (0 = slot
+    not verifying this tick; its rows scatter to the trash block).
     """
 
     num_decode: int
     num_chunks: int
     chunk_tokens: int
     chunk_lens: jax.Array  # (num_chunks,) int32
+    num_verify: int = 0
+    verify_tokens: int = 0
+    verify_lens: Optional[jax.Array] = None  # (num_verify,) int32
 
 
 def attention_init(rng, cfg: ArchConfig, *, dtype=jnp.float32):
@@ -301,40 +314,68 @@ def attention_apply(
     if paged and mixed is not None:
         from repro.kernels import ops
 
-        # Fused decode + chunked-prefill step: R = B_dec + NC*C rows.
+        # Fused decode + verify + chunked-prefill step:
+        # R = B_dec + NV*K1 + NC*C rows.
         B_dec, NC, C = (
             mixed.num_decode, mixed.num_chunks, mixed.chunk_tokens
         )
+        NV, K1 = mixed.num_verify, mixed.verify_tokens
+        v0, c0 = B_dec, B_dec + NV * K1
         pool_k, pool_v = cache["k"], cache["v"]
         positions = cache_index  # (R,) absolute write position per row
-        dec_live = positions[:B_dec] > 0
-        chunk_live = (
-            jnp.arange(C)[None, :] < mixed.chunk_lens[:, None]
-        )  # (NC, C)
-        live = jnp.concatenate([dec_live, chunk_live.reshape(-1)])
-        # ONE cache-write path for both lanes: a single per-row scatter.
+        live_parts = []
+        if B_dec:
+            dec_live = positions[:B_dec] > 0
+            live_parts.append(dec_live)
+        if NV:
+            ver_live = (
+                jnp.arange(K1)[None, :] < mixed.verify_lens[:, None]
+            )  # (NV, K1)
+            live_parts.append(ver_live.reshape(-1))
+        if NC:
+            chunk_live = (
+                jnp.arange(C)[None, :] < mixed.chunk_lens[:, None]
+            )  # (NC, C)
+            live_parts.append(chunk_live.reshape(-1))
+        live = jnp.concatenate(live_parts)
+        # ONE cache-write path for all lanes: a single per-row scatter.
         new_pk = paged_row_write(pool_k, k, block_tables, positions, live)
         new_pv = paged_row_write(pool_v, v, block_tables, positions, live)
         cache = {"k": new_pk, "v": new_pv}
-        # Decode lane: live slots attend their freshly written token too.
-        y_dec = ops.decode_attention(
-            q[:B_dec], new_pk, new_pv, block_tables[:B_dec],
-            positions[:B_dec] + dec_live,
-            implementation=implementation,
-        )
-        # Chunk lanes: rows attend every pool position <= their own —
-        # prefix blocks, earlier chunks and the chunk itself (written
-        # above) are all just block reads.
-        qc = q[B_dec:, 0].reshape(NC, C, *q.shape[2:])
-        ctab = block_tables[B_dec:].reshape(NC, C, -1)[:, 0]
-        cstart = positions[B_dec:].reshape(NC, C)[:, 0]
-        y_ch = ops.prefill_attention(
-            qc, new_pk, new_pv, ctab, cstart, mixed.chunk_lens,
-            implementation=implementation,
-        )
-        y = jnp.concatenate(
-            [y_dec, y_ch.reshape(NC * C, 1, *y_ch.shape[2:])], axis=0
-        )
+        ys = []
+        if B_dec:
+            # Decode lane: live slots attend their fresh token too.
+            y_dec = ops.decode_attention(
+                q[:B_dec], new_pk, new_pv, block_tables[:B_dec],
+                positions[:B_dec] + dec_live,
+                implementation=implementation,
+            )
+            ys.append(y_dec)
+        if NV:
+            # Verify lanes: K1 rows per slot (pending token + drafts),
+            # row j attends pool positions <= start + j — the draft
+            # prefix written above plus everything already cached.
+            qv = q[v0:c0, 0].reshape(NV, K1, *q.shape[2:])
+            vtab = block_tables[v0:c0].reshape(NV, K1, -1)[:, 0]
+            vstart = positions[v0:c0].reshape(NV, K1)[:, 0]
+            y_v = ops.prefill_attention(
+                qv, new_pk, new_pv, vtab, vstart, mixed.verify_lens,
+                implementation=implementation,
+            )
+            ys.append(y_v.reshape(NV * K1, 1, *y_v.shape[2:]))
+        if NC:
+            # Chunk lanes: rows attend every pool position <= their own
+            # — prefix blocks, earlier chunks and the chunk itself
+            # (written above) are all just block reads.
+            qc = q[c0:, 0].reshape(NC, C, *q.shape[2:])
+            ctab = block_tables[c0:].reshape(NC, C, -1)[:, 0]
+            cstart = positions[c0:].reshape(NC, C)[:, 0]
+            y_ch = ops.prefill_attention(
+                qc, new_pk, new_pv, ctab, cstart, mixed.chunk_lens,
+                implementation=implementation,
+            )
+            ys.append(y_ch.reshape(NC * C, 1, *y_ch.shape[2:]))
+        y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=0)
         out = jnp.einsum("bshk,hkd->bsd", y, wo)
         return out, cache
     if paged:

@@ -1,0 +1,103 @@
+"""Draft-model construction for speculative decoding on the serve path.
+
+Upcycling hands the serving stack a free draft model: the MoE was
+initialized by replicating the dense parent's MLP into every expert
+(core/upcycle.py), so the dense parent shares tokenizer, embeddings,
+attention weights, positions and output-distribution lineage with its
+upcycled child. Two zero-training drafts fall out of the checkpoint the
+engine already holds:
+
+``dense``
+    Extract the dense parent from the MoE params by slicing expert 0 of
+    every MoE layer back into a plain MLP and dropping the router. For a
+    freshly upcycled checkpoint (``expert_init="copy"``) this IS the
+    parent checkpoint bit-for-bit; after fine-tuning it is an expert-0
+    truncation — still a valid draft (exact rejection sampling keeps the
+    output distribution identical regardless of draft quality; a worse
+    draft only lowers the acceptance rate).
+
+``top1``
+    Keep the MoE params untouched and truncate routing to ``top_k=1`` —
+    the draft shares every weight with the target and just reads fewer
+    experts per token.
+
+Both return plain (unwrapped) value trees, matching what ServeEngine
+holds after ``param.split``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs import ArchConfig
+from repro.models import stack as stk
+
+DRAFT_KINDS = ("none", "dense", "top1")
+
+
+def dense_parent_params(params, cfg: ArchConfig):
+    """Slice the dense parent out of an upcycled MoE param tree.
+
+    params: PLAIN value tree of the MoE model (post ``param.split``).
+    Every MoE layer's ``ffn = {router, experts: {wi[, wg], wo}}``
+    becomes ``{k: experts[k][0]}`` (expert 0's copy of the parent MLP);
+    all other subtrees are shared by reference — no copies, no extra
+    host memory beyond the sliced MLPs.
+
+    Returns (dense_params, dense_cfg) with ``dense_cfg =
+    cfg.dense_parent()``.
+    """
+    if cfg.moe is None:
+        raise ValueError("config has no MoE section; nothing to slice")
+    from repro.core.upcycle import _restack_values, _unstack_values
+
+    dense_cfg = cfg.dense_parent()
+
+    def map_stack(stack_key: str, which: str):
+        tdescs = stk.layer_descs(cfg, stack=which)
+        ddescs = stk.layer_descs(dense_cfg, stack=which)
+        layers = _unstack_values(params[stack_key], tdescs)
+        out = []
+        for dl, td, dd in zip(layers, tdescs, ddescs):
+            new = dict(dl)
+            if td.ffn == "moe" and dd.ffn == "dense":
+                new["ffn"] = {
+                    k: v[0] for k, v in dl["ffn"]["experts"].items()
+                }
+            out.append(new)
+        return _restack_values(out, ddescs)
+
+    out = dict(params)
+    out["stack"] = map_stack("stack", "decoder")
+    if cfg.structure == "encoder_decoder":
+        out["encoder"] = map_stack("encoder", "encoder")
+    return out, dense_cfg
+
+
+def top1_cfg(cfg: ArchConfig) -> ArchConfig:
+    """The target architecture with routing truncated to top-1."""
+    if cfg.moe is None:
+        raise ValueError("config has no MoE section; cannot truncate")
+    return dataclasses.replace(
+        cfg,
+        moe=dataclasses.replace(cfg.moe, top_k=1),
+        name=cfg.name + "-top1",
+    )
+
+
+def make_draft(
+    params, cfg: ArchConfig, kind: str
+) -> Tuple[Optional[dict], Optional[ArchConfig]]:
+    """Build (draft_params, draft_cfg) for a ServeConfig.draft kind.
+
+    ``none`` -> (None, None); ``dense`` -> expert-0 parent extraction;
+    ``top1`` -> the same params object under a top-1 routing config.
+    """
+    if kind == "none":
+        return None, None
+    if kind == "dense":
+        return dense_parent_params(params, cfg)
+    if kind == "top1":
+        return params, top1_cfg(cfg)
+    raise ValueError(f"unknown draft kind {kind!r}; want one of "
+                     f"{DRAFT_KINDS}")

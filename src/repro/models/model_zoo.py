@@ -582,6 +582,114 @@ def paged_mixed_step(
     return new_cache, logits[:, 0]
 
 
+def paged_verify_step(
+    params,
+    verify_tokens,
+    chunk_tokens,
+    cache,
+    verify_tables,
+    verify_starts,
+    verify_lens,
+    chunk_tables,
+    chunk_starts,
+    chunk_lens,
+    cfg: ArchConfig,
+    *,
+    ac: ApplyCfg = ApplyCfg(),
+    ctx: Optional[ShardCtx] = None,
+):
+    """One fused speculative-verify + chunked-prefill step: the target
+    model scores B verify lanes of K1 = k+1 positions each (the slot's
+    pending token plus its k drafted tokens) AND the pending prefill
+    chunks through a SINGLE forward (one jit signature per engine).
+
+    verify_tokens: (B, K1) per slot [pending, d_1..d_k] right-padded;
+    verify_tables: (B, nb) the slot's block table (zeroed for slots not
+    verifying); verify_starts: (B,) tokens already cached (the pending
+    token's write position); verify_lens: (B,) valid rows per lane,
+    1 + k_eff, 0 = slot idle this tick. chunk_*: exactly as in
+    :func:`paged_mixed_step`.
+
+    The row batch is R = B*K1 + NC*C single-token rows, all sharing the
+    one paged k/v scatter; verify rows read via the paged prefill
+    kernel (row j attends positions <= starts + j), so verification IS
+    a chunk-lane pass over already-drafted tokens. Dead rows (beyond
+    verify_lens, idle lanes) scatter to the trash block and are masked
+    out of MoE routing — rejected drafts leak no pool state because the
+    engine simply rewinds ``slot.length``; stale rows past the new
+    length are never attended and get overwritten by later writes.
+
+    Returns ``(cache, logits (B*K1 + NC, V))``: rows [:B*K1] are the
+    target logits at EVERY verify position (row b*K1 + j scores the
+    token following verify_tokens[b, j]), rows [B*K1:] each chunk
+    lane's last-valid-row logits. One array, one host sync per step.
+    """
+    ac = ac.resolve()
+    params = _cast_params(params, ac.cdtype)
+    B, K1 = verify_tokens.shape
+    NC, C = chunk_tokens.shape
+    verify_starts = verify_starts.astype(jnp.int32)
+    verify_lens = verify_lens.astype(jnp.int32)
+    chunk_starts = chunk_starts.astype(jnp.int32)
+    chunk_lens = chunk_lens.astype(jnp.int32)
+    ver_live = jnp.arange(K1)[None, :] < verify_lens[:, None]  # (B, K1)
+    chunk_live = jnp.arange(C)[None, :] < chunk_lens[:, None]  # (NC, C)
+    tokens = jnp.concatenate(
+        [verify_tokens.reshape(B * K1), chunk_tokens.reshape(NC * C)]
+    )[:, None].astype(jnp.int32)  # (R, 1)
+    positions = jnp.concatenate([
+        (verify_starts[:, None] + jnp.arange(K1)[None, :]).reshape(B * K1),
+        (chunk_starts[:, None] + jnp.arange(C)[None, :]).reshape(NC * C),
+    ]).astype(jnp.int32)  # (R,)
+    row_tables = jnp.concatenate([
+        jnp.repeat(verify_tables, K1, axis=0),
+        jnp.repeat(chunk_tables, C, axis=0),
+    ], axis=0).astype(jnp.int32)  # (R, nb)
+    token_mask = jnp.concatenate(
+        [ver_live.reshape(B * K1), chunk_live.reshape(NC * C)]
+    )[:, None]
+    from repro.models.attention import MixedMeta
+
+    x = embed_apply(
+        params["embed"], tokens, cfg, positions=positions[:, None]
+    ).astype(ac.cdtype)
+    x = act(ctx, x, "batch seq embed")
+    x, _, stack_cache = stk.stack_apply(
+        params["stack"], x, cfg, stk.layer_descs(cfg, stack="decoder"),
+        cache=cache["stack"], cache_index=positions,
+        block_tables=row_tables,
+        token_mask=token_mask,
+        mixed=MixedMeta(
+            num_decode=0, num_chunks=NC, chunk_tokens=C,
+            chunk_lens=chunk_lens,
+            num_verify=B, verify_tokens=K1, verify_lens=verify_lens,
+        ),
+        mode="decode", causal=True,
+        router_kind=stk.stack_router_kind(cfg, stack="decoder"),
+        dispatch=ac.dispatch, sorted_block=ac.sorted_block,
+        moe_impl=ac.moe_impl,
+        attn_impl=ac.attn_impl,
+        mixer_impl=ac.mixer_impl,
+        pad_heads_multiple=ac.pad_heads_multiple,
+        ctx=ctx, remat="none",
+    )
+    new_cache = dict(cache)
+    new_cache["stack"] = stack_cache
+    # Head over ALL verify rows (the engine needs the target
+    # distribution at every drafted position for rejection sampling)
+    # plus each chunk lane's last valid row.
+    d = x.shape[-1]
+    xv = x[: B * K1, 0]
+    last = jnp.clip(chunk_lens - 1, 0, C - 1)
+    xc = x[B * K1:, 0].reshape(NC, C, d)[jnp.arange(NC), last]
+    h = jnp.concatenate([xv, xc], axis=0)[:, None]  # (B*K1 + NC, 1, d)
+    h = norm_apply(params["final_norm"], h, cfg)
+    logits = head_apply(
+        params.get("head", {}), h, params.get("embed"), cfg
+    ).astype(jnp.float32)
+    return new_cache, logits[:, 0]
+
+
 def serve_cache_axes(cfg: ArchConfig):
     descs = stk.layer_descs(cfg, stack="decoder")
     axes = {"stack": stk.stack_cache_axes(descs)}

@@ -55,6 +55,26 @@ attn kernels   decode rows: single-query block-table walk
 MoE            dead rows masked out of routing entirely — expert
                FLOPs track live tokens; decode rows ride the sorted
                ragged dispatch, prefill chunks keep expert work dense
+draft/verify   speculative decoding (``ServeConfig.draft`` != "none"):
+               the dense parent sliced from the upcycled checkpoint
+               (or a top-1 truncation) drafts ``spec_k`` tokens per
+               slot against its own draft block lanes (doubled
+               admission footprint, same pool), then the MoE scores
+               all ``k+1`` positions per slot as verify lanes on the
+               ONE mixed-step signature (zoo.paged_verify_step);
+               exact rejection sampling (speculative.verify_accept)
+               keeps outputs identical to vanilla — greedy ==
+               vanilla token-for-token, ``q == p`` accepts at 1.0
+               (``acceptance_rate`` / ``spec_drafted`` /
+               ``spec_accepted`` in engine stats and per-request
+               records)
+in-flight      same-tick admissions sharing a prompt prefix map the
+prefix map     donor's still-being-written full blocks immediately
+               (scheduler ``_inflight``): pending until the donor's
+               computed length passes each block's end, then promoted
+               without burning chunk lanes; a dead donor
+               preempts-and-requeues the follower. Hits surface in
+               ``prefix_hit_frac`` / ``inflight_promotions``
 =============  =====================================================
 
 Request lifecycle::
@@ -127,6 +147,7 @@ from repro.serve.paged_cache import (
     bucket_len,
 )
 from repro.serve.scheduler import Request, Scheduler, Slot
+from repro.serve.speculative import SpecRunner, sample_token, verify_accept
 
 __all__ = [
     "BlockPool",
@@ -137,6 +158,9 @@ __all__ = [
     "ServeConfig",
     "ServeEngine",
     "Slot",
+    "SpecRunner",
     "blocks_needed",
     "bucket_len",
+    "sample_token",
+    "verify_accept",
 ]

@@ -57,6 +57,7 @@ from repro.configs import ArchConfig
 from repro.models import model_zoo as zoo
 from repro.serve.paged_cache import BlockPool, bucket_len
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.speculative import sample_token, verify_accept
 from repro.sharding import ShardCtx
 
 
@@ -139,6 +140,19 @@ class ServeConfig:
     # of spinning forever (a request whose worst-case footprint exceeds
     # the whole pool fails immediately at admission).
     watchdog_ticks: int = 32
+    # --- speculative decoding (chunked mode only) -----------------------
+    # draft != "none" arms speculation: a draft model drafts spec_k
+    # tokens per decoding slot against private paged lanes, the target
+    # verifies all spec_k + 1 positions in ONE pass (verify rows are
+    # chunk lanes) and exact rejection sampling keeps the output
+    # distribution identical to vanilla decoding. "dense" extracts the
+    # dense parent from the upcycled checkpoint (expert-0 slice),
+    # "top1" truncates the MoE's routing to top-1 sharing every weight
+    # (models/draft.py) — or pass explicit draft_params/draft_cfg to
+    # ServeEngine. Admission reserves a second same-size block set per
+    # request for the draft lanes (2x footprint).
+    spec_k: int = 4
+    draft: str = "none"  # none | dense | top1
     # Run BlockPool.check_invariants at every tick boundary (always on
     # when chaos is set). Test/debug knob — O(capacity) per tick.
     audit_invariants: bool = False
@@ -154,6 +168,8 @@ class ServeEngine:
         *,
         ac: zoo.ApplyCfg = zoo.ApplyCfg(),
         ctx: Optional[ShardCtx] = None,
+        draft_params=None,
+        draft_cfg: Optional[ArchConfig] = None,
     ):
         # sc defaults to None, NOT ServeConfig(): a dataclass default
         # would be one shared mutable instance across every engine.
@@ -198,6 +214,22 @@ class ServeEngine:
                 "preemption / chaos / audits) require "
                 "admission='chunked'; prefill_on_join is the frozen "
                 "pre-chunking baseline"
+            )
+        from repro.models.draft import DRAFT_KINDS
+
+        if sc.draft not in DRAFT_KINDS:
+            raise ValueError(
+                f"unknown draft kind {sc.draft!r} (want {DRAFT_KINDS})"
+            )
+        self._spec = sc.paged and sc.draft != "none"
+        if self._spec and sc.admission != "chunked":
+            raise ValueError(
+                "speculative decoding rides the chunked mixed step; "
+                "set admission='chunked'"
+            )
+        if self._spec and sc.spec_k < 1:
+            raise ValueError(
+                f"speculative decoding needs spec_k >= 1; got {sc.spec_k}"
             )
         self.params, self.cfg, self.sc, self.ac, self.ctx = (
             params, cfg, sc, ac, ctx
@@ -248,6 +280,54 @@ class ServeEngine:
 
                 self._mixed_step = jax.jit(_mstep, donate_argnums=(3,))
                 self._copy_block = jax.jit(_cow, donate_argnums=(0,))
+                if self._spec:
+                    from repro.models.draft import make_draft
+
+                    if draft_params is None or draft_cfg is None:
+                        draft_params, draft_cfg = make_draft(
+                            params, cfg, sc.draft
+                        )
+                    self._draft_params = draft_params
+                    self._draft_cfg = draft_cfg
+
+                    def _vstep(params, vtoks, ctoks, cache, vtab,
+                               vstart, vlen, ctab, cstart, clen):
+                        return zoo.paged_verify_step(
+                            params, vtoks, ctoks, cache, vtab, vstart,
+                            vlen, ctab, cstart, clen, cfg, ac=ac,
+                            ctx=ctx,
+                        )
+
+                    def _dstep(params, tokens, cache, tables, lengths):
+                        return zoo.paged_decode_step(
+                            params, tokens, cache, tables, lengths,
+                            draft_cfg, ac=ac, ctx=ctx,
+                        )
+
+                    def _dpre(params, chunk_tokens, cache, chunk_tables,
+                              chunk_starts, chunk_lens):
+                        # Draft catch-up: a mixed step with ZERO decode
+                        # rows — just chunk lanes over the draft cache.
+                        nb = chunk_tables.shape[1]
+                        return zoo.paged_mixed_step(
+                            params,
+                            jnp.zeros((0, 1), jnp.int32),
+                            chunk_tokens, cache,
+                            jnp.zeros((0, nb), jnp.int32),
+                            jnp.zeros((0,), jnp.int32),
+                            chunk_tables, chunk_starts, chunk_lens,
+                            draft_cfg, ac=ac, ctx=ctx,
+                        )
+
+                    self._verify_step = jax.jit(
+                        _vstep, donate_argnums=(3,)
+                    )
+                    self._draft_step = jax.jit(
+                        _dstep, donate_argnums=(2,)
+                    )
+                    self._draft_prefill = jax.jit(
+                        _dpre, donate_argnums=(2,)
+                    )
             else:
                 def _pprefill(params, tokens, cache, table, length):
                     return zoo.paged_prefill(
@@ -367,7 +447,10 @@ class ServeEngine:
         sc = self.sc
         bs = sc.block_size
         nb_max = -(-sc.max_len // bs)
-        num_blocks = sc.num_blocks or (1 + sc.max_batch * nb_max)
+        # Speculation doubles the per-request footprint (private draft
+        # lanes), so the full-capacity auto-sizing doubles too.
+        lanes = 2 if self._spec else 1
+        num_blocks = sc.num_blocks or (1 + lanes * sc.max_batch * nb_max)
         pool = BlockPool(
             num_blocks, bs,
             prefix_cache=sc.prefix_cache and sc.admission == "chunked",
@@ -386,6 +469,8 @@ class ServeEngine:
                 # oversized-request failure path in chunked mode, so
                 # every submitted request gets a terminal status.
                 reject_oversized=False,
+                spec=self._spec,
+                inflight_share=sc.prefix_cache,
             )
         else:
             sched = Scheduler(sc.max_batch, pool, sc.max_len)
@@ -443,7 +528,7 @@ class ServeEngine:
         sc = self.sc
         bs = sc.block_size
         B, NC, C = sc.max_batch, sc.chunks_per_step, sc.chunk_size
-        pool, sched, seed0, cache, nb, _ = self._session(requests, rng)
+        pool, sched, seed0, cache, nb, nblk = self._session(requests, rng)
         outs, emit = self._emitter(requests, on_token)
         req_map = {r.rid: r for r in requests}
 
@@ -456,6 +541,29 @@ class ServeEngine:
         ctab = np.zeros((NC, nb), np.int32)
         cstart = np.zeros((NC,), np.int32)
         clen = np.zeros((NC,), np.int32)
+
+        # -- speculative decoding: draft runner + verify lanes ----------
+        spec = self._spec
+        runner = None
+        K1 = sc.spec_k + 1
+        if spec:
+            from repro.serve.speculative import SpecRunner
+
+            dcache = zoo.init_paged_serve_cache(
+                self._draft_cfg, nblk, bs, dtype=self._cache_dtype
+            )
+            runner = SpecRunner(
+                draft_step=self._draft_step,
+                draft_prefill=self._draft_prefill,
+                params=self._draft_params, cache=dcache,
+                spec_k=sc.spec_k, temperature=sc.temperature,
+                seed0=seed0, max_batch=B, num_chunks=NC, chunk_size=C,
+                nb=nb,
+            )
+            vtoks = np.zeros((B, K1), np.int32)
+            vtab = np.zeros((B, nb), np.int32)
+            vstart = np.zeros((B,), np.int32)
+            vlen = np.zeros((B,), np.int32)
 
         chaos = sc.chaos
         audit = sc.audit_invariants or chaos is not None
@@ -476,6 +584,10 @@ class ServeEngine:
             "peak_occupancy": 0.0,
             "stall_ticks_max": 0,  # longest block-starved head streak
             "audits": 0,
+            # -- speculative decoding ------------------------------------
+            "spec_drafted": 0,   # draft tokens proposed to the verifier
+            "spec_accepted": 0,  # draft tokens accepted by the verifier
+            "inflight_promotions": 0,  # pending shared blocks promoted
         }
         if chaos is not None:
             stats["chaos"] = {"evictions": 0, "holds": 0,
@@ -488,6 +600,8 @@ class ServeEngine:
             slot_tables[i, :] = 0
             lengths[i] = 0
             cur[i, 0] = 0
+            if runner is not None:
+                runner.clear_slot(i)
 
         maybe_finish = self._finisher(sched, clear_slot)
         # Forced evictions (preempt / timeout) must clear the victim's
@@ -572,6 +686,8 @@ class ServeEngine:
             if audit:
                 pool.check_invariants(
                     [s.blocks for s in sched.active]
+                    + [s.draft_blocks for s in sched.active
+                       if s.draft_blocks]
                     + [h[1] for h in holds]
                 )
                 stats["audits"] += 1
@@ -607,6 +723,28 @@ class ServeEngine:
                 lengths[i] = slot.length
                 stats["prefix_hit_tokens"] += slot.prefix_tokens
                 stats["prompt_tokens"] += len(slot.eff_prompt)
+                if runner is not None:
+                    runner.set_slot(slot)
+            # -- in-flight prefix promotion: a follower's shared-but-
+            # pending blocks become readable only once the donor has
+            # computed past their end (promote in contiguous order); a
+            # dead or recycled donor invalidates the follower's mapped
+            # suffix -> preempt-and-requeue (copy-free recovery
+            # re-prefills from registered blocks).
+            for slot in list(sched.active):
+                while slot.pending_shared:
+                    end, donor, dseq = slot.pending_shared[0]
+                    if donor.request is None or donor.admit_seq != dseq:
+                        sched.preempt_slot(slot, step, seq_of)
+                        break
+                    if donor.length < end or slot.length + bs != end:
+                        break
+                    slot.pending_shared.pop(0)
+                    slot.length = end
+                    lengths[slot.index] = end
+                    slot.prefix_tokens += bs
+                    stats["prefix_hit_tokens"] += bs
+                    stats["inflight_promotions"] += 1
             stats["stall_ticks_max"] = max(
                 stats["stall_ticks_max"], sched.stall_ticks
             )
@@ -620,6 +758,11 @@ class ServeEngine:
             chunks = []  # (slot, start, ntok)
             planned = {}
             for slot in sched.prefilling():
+                if slot.pending_shared:
+                    # waiting on a donor's in-flight writes — burning
+                    # lanes here would recompute what the donor is about
+                    # to hand over for free.
+                    continue
                 plen = len(slot.eff_prompt)
                 pos = planned.get(slot.index, slot.length)
                 while len(chunks) < NC and pos < plen:
@@ -632,6 +775,18 @@ class ServeEngine:
 
             decoding = [s for s in sched.active if s.decoding]
             if not decoding and not chunks:
+                pend = [s for s in sched.active if s.pending_shared]
+                if pend:
+                    # Unreachable in normal operation (a pending slot
+                    # implies a live prefilling donor, which implies
+                    # chunk work), but a wedged donor chain must not
+                    # spin the watchdog — requeue the followers.
+                    for s in pend:
+                        sched.preempt_slot(s, step, seq_of)
+                    dispatch_events()
+                    tick_audit()
+                    step += 1
+                    continue
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
@@ -669,11 +824,6 @@ class ServeEngine:
             # -- build the fixed-shape lanes. Non-decoding slots are
             # masked out of the decode lane (zero table row, length 0 ->
             # trash-block write, no routing claims).
-            dec_tables[:] = 0
-            dec_lengths[:] = 0
-            for s in decoding:
-                dec_tables[s.index] = slot_tables[s.index]
-                dec_lengths[s.index] = lengths[s.index]
             ctoks[:] = 0
             ctab[:] = 0
             cstart[:] = 0
@@ -684,16 +834,51 @@ class ServeEngine:
                 cstart[ci] = start
                 clen[ci] = n
 
-            cache, logits = self._mixed_step(
-                self.params, jnp.asarray(cur), jnp.asarray(ctoks),
-                cache, jnp.asarray(dec_tables), jnp.asarray(dec_lengths),
-                jnp.asarray(ctab), jnp.asarray(cstart),
-                jnp.asarray(clen),
-            )
+            if spec:
+                # draft first: catch behind draft caches up, then run
+                # the lockstep k-token draft loop; decode slots become
+                # width-(1+k_eff) verify lanes on the target.
+                runner.catch_up(sched.active, seq_of)
+                dmap = runner.draft(decoding, cur)
+                vtoks[:] = 0
+                vtab[:] = 0
+                vstart[:] = 0
+                vlen[:] = 0
+                for s in decoding:
+                    i = s.index
+                    drafted = dmap[i][0] if i in dmap else []
+                    vtoks[i, 0] = cur[i, 0]
+                    for dj, d in enumerate(drafted):
+                        vtoks[i, 1 + dj] = d
+                    vtab[i] = slot_tables[i]
+                    vstart[i] = lengths[i]
+                    vlen[i] = 1 + len(drafted)
+                cache, logits = self._verify_step(
+                    self.params, jnp.asarray(vtoks), jnp.asarray(ctoks),
+                    cache, jnp.asarray(vtab), jnp.asarray(vstart),
+                    jnp.asarray(vlen), jnp.asarray(ctab),
+                    jnp.asarray(cstart), jnp.asarray(clen),
+                )
+                chunk_off = B * K1
+            else:
+                dec_tables[:] = 0
+                dec_lengths[:] = 0
+                for s in decoding:
+                    dec_tables[s.index] = slot_tables[s.index]
+                    dec_lengths[s.index] = lengths[s.index]
+                cache, logits = self._mixed_step(
+                    self.params, jnp.asarray(cur), jnp.asarray(ctoks),
+                    cache, jnp.asarray(dec_tables),
+                    jnp.asarray(dec_lengths),
+                    jnp.asarray(ctab), jnp.asarray(cstart),
+                    jnp.asarray(clen),
+                )
+                chunk_off = B
             step += 1
             stats["mixed_steps"] += 1
             stats["chunk_rows_used"] += int(clen.sum())
-            n_compiled = self._mixed_step._cache_size()
+            n_compiled = (self._verify_step if spec
+                          else self._mixed_step)._cache_size()
             if n_compiled != compiled:
                 compiled = n_compiled
                 stats["compile_events"].append(step)
@@ -715,8 +900,9 @@ class ServeEngine:
                     if not slot.first_done:
                         slot.first_token_at = step
                         slot.first_done = True
-                    tok = self._sample_one(lg_host[B + ci], seed0,
-                                           req.rid, slot.generated)
+                    tok = self._sample_one(lg_host[chunk_off + ci],
+                                           seed0, req.rid,
+                                           slot.generated)
                     emit(req, slot, tok)
                     if not maybe_finish(slot, tok, step):
                         slot.decoding = True
@@ -727,6 +913,37 @@ class ServeEngine:
                 if slot.request is None:
                     continue  # evicted this tick (deadline / chaos)
                 i, req = slot.index, slot.request
+                if spec:
+                    # Exact rejection sampling over this slot's verify
+                    # rows: emit m accepted drafts + 1 correction/bonus.
+                    # Rollback is overwrite-and-mask — length simply
+                    # stops after the last emitted token; stale cache
+                    # positions past it are never attended.
+                    drafted, qrows = dmap.get(i, ([], []))
+                    p_rows = lg_host[i * K1:i * K1 + 1 + len(drafted)]
+                    emitted, acc = verify_accept(
+                        drafted, qrows, p_rows, sc.temperature,
+                        seed0, req.rid, slot.generated,
+                    )
+                    stats["spec_drafted"] += len(drafted)
+                    stats["spec_accepted"] += acc
+                    slot.drafted += len(drafted)
+                    slot.accepted += acc
+                    fin = False
+                    for tok in emitted:
+                        slot.length += 1  # verified token is in cache
+                        lengths[i] += 1
+                        emit(req, slot, tok)
+                        if maybe_finish(slot, tok, step):
+                            fin = True
+                            break
+                    if not fin:
+                        cur[i, 0] = emitted[-1]
+                        if i in dmap:
+                            # draft wrote positions length..length+k_eff
+                            # in lockstep; the accepted region is valid.
+                            slot.draft_length = slot.length
+                    continue
                 slot.length += 1  # cur token entered the cache
                 lengths[i] += 1
                 tok = self._sample_one(lg_host[i], seed0, req.rid,
@@ -749,7 +966,18 @@ class ServeEngine:
         for rec in sched.finished.values():
             counts[rec["status"]] = counts.get(rec["status"], 0) + 1
         stats["status_counts"] = counts
-        stats["compile_count"] = self._mixed_step._cache_size()
+        stats["compile_count"] = (
+            self._verify_step._cache_size() if spec
+            else self._mixed_step._cache_size()
+        )
+        if spec:
+            stats["spec"] = {
+                "k": sc.spec_k, "draft": sc.draft, **runner.stats,
+            }
+            stats["acceptance_rate"] = (
+                stats["spec_accepted"] / max(stats["spec_drafted"], 1)
+            )
+            stats["draft_compile_count"] = runner.compile_count()
         stats["prefix_hit_frac"] = (
             stats["prefix_hit_tokens"] / max(stats["prompt_tokens"], 1)
         )
@@ -868,12 +1096,9 @@ class ServeEngine:
         or Gumbel-max temperature sampling (== categorical in law)
         seeded on (session seed, rid, token index) — host-only and
         independent of slot placement and batch composition, so
-        staggered admission reproduces solo runs."""
-        if self.sc.temperature <= 0.0:
-            return int(logits_row.argmax())
-        g = np.random.default_rng((seed0, rid, n)).gumbel(
-            size=logits_row.shape
-        )
-        return int(
-            (logits_row / self.sc.temperature + g).argmax()
+        staggered admission reproduces solo runs. Delegates to
+        ``speculative.sample_token`` so the vanilla and speculative
+        paths share one stream definition (the parity contract)."""
+        return sample_token(
+            logits_row, self.sc.temperature, seed0, rid, n
         )

@@ -71,7 +71,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
-from repro.serve.paged_cache import BlockPool, blocks_needed
+from repro.serve.paged_cache import BlockPool, _chain, blocks_needed
 
 FREE = "free"
 ACTIVE = "active"
@@ -138,6 +138,27 @@ class Slot:
     ttft_at: Optional[int] = None  # absolute deadline ticks
     deadline_at: Optional[int] = None
     sub_seq: int = 0  # original submission seq (stable requeue order)
+    # --- speculative decoding (Scheduler(spec=True)) -------------------
+    # Private draft-model KV blocks (same pool, same footprint as the
+    # target blocks, never prefix-indexed) and the draft cache's valid
+    # coverage: draft_length == length means the draft is in lockstep
+    # and may speculate this tick.
+    draft_blocks: tuple = ()
+    draft_length: int = 0
+    drafted: int = 0  # draft tokens proposed (across preemptions)
+    accepted: int = 0  # draft tokens accepted by the target
+    # --- in-flight prefix sharing --------------------------------------
+    # Blocks shared from a STILL-PREFILLING donor slot, pending until
+    # the donor's chunks actually write them: [(end_tokens, donor_slot,
+    # donor_admit_seq)] in contiguous order. While non-empty the slot
+    # takes no chunk lanes (it must not write into/past the pending
+    # region); the engine promotes entries as the donor's length
+    # crosses each end, or preempts-and-requeues the slot if the donor
+    # dies first.
+    pending_shared: list = dataclasses.field(default_factory=list)
+    # Chain hashes this slot registered in the in-flight map (pruned on
+    # _clear).
+    inflight_keys: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -174,6 +195,8 @@ class Scheduler:
         default_deadline: Optional[int] = None,
         reject_oversized: bool = True,
         on_evict: Optional[Callable[[Slot], None]] = None,
+        spec: bool = False,
+        inflight_share: bool = False,
     ):
         if queue_policy not in QUEUE_POLICIES:
             raise ValueError(
@@ -181,6 +204,16 @@ class Scheduler:
             )
         self.pool = pool
         self.max_len = max_len
+        # Speculative decoding: every admission additionally allocates a
+        # same-size private draft-lane block set, so admission and the
+        # structural-failure watchdog account a 2x footprint.
+        self.spec = spec
+        # In-flight prefix sharing: admissions may map blocks a
+        # still-prefilling donor slot has PLANNED (same-tick bursts),
+        # recorded as pending until the donor writes them.
+        self.inflight_share = inflight_share
+        # chain hash -> (donor_slot, block_id, end_tokens, admit_seq).
+        self._inflight: dict[str, tuple] = {}
         self.queue_limit = queue_limit
         self.queue_policy = queue_policy
         self.shed_occupancy = shed_occupancy
@@ -229,6 +262,8 @@ class Scheduler:
             )
         budget = min(req.max_new, self.max_len - plen)
         need = blocks_needed(plen, budget, self.pool.block_size)
+        if self.spec:
+            need *= 2  # target blocks + same-size draft lanes
         if self.reject_oversized and need > self.pool.capacity:
             raise ValueError(
                 f"request {req.rid}: needs {need} KV blocks, pool holds "
@@ -271,6 +306,8 @@ class Scheduler:
                 "generated": slot.generated,
                 "prefix_tokens": slot.prefix_tokens,
                 "preemptions": slot.preemptions,
+                "drafted": slot.drafted,
+                "accepted": slot.accepted,
             }
         elif res is not None:  # preempted earlier, died in the queue
             rec = {
@@ -280,10 +317,13 @@ class Scheduler:
                 "generated": res["generated"],
                 "prefix_tokens": 0,
                 "preemptions": res["preemptions"],
+                "drafted": res.get("drafted", 0),
+                "accepted": res.get("accepted", 0),
             }
         else:  # never admitted
             rec = {"admitted_at": -1, "first_token_at": -1,
-                   "generated": 0, "prefix_tokens": 0, "preemptions": 0}
+                   "generated": 0, "prefix_tokens": 0, "preemptions": 0,
+                   "drafted": 0, "accepted": 0}
         rec.update(arrival=req.arrival, finished_at=now, status=status,
                    reason=reason)
         self.finished[req.rid] = rec
@@ -389,15 +429,17 @@ class Scheduler:
             need = blocks_needed(
                 len(eff), budget - generated, self.pool.block_size
             )
-            if need > self.pool.capacity:
+            total_need = need * 2 if self.spec else need
+            if total_need > self.pool.capacity:
                 # Structurally stuck: no amount of waiting or preemption
                 # frees enough blocks. Fail fast with the diagnostic the
                 # watchdog would otherwise produce by spinning.
                 self._drop_entry(
                     entry, now, FAILED,
-                    f"watchdog: request {req.rid} needs {need} KV blocks "
-                    f"but the pool only holds {self.pool.capacity} — "
-                    "raise num_blocks or lower max_new",
+                    f"watchdog: request {req.rid} needs {total_need} KV "
+                    f"blocks but the pool only holds "
+                    f"{self.pool.capacity} — raise num_blocks or lower "
+                    "max_new",
                 )
                 continue
             match = self.pool.match_prefix(eff)
@@ -406,9 +448,22 @@ class Scheduler:
             # below cannot evict their content out from under us; roll
             # back if the pool cannot cover the rest.
             self.pool.share(shared)
-            fresh = self.pool.alloc(need - len(shared))
-            if fresh is None:
+            # In-flight extension: walk full blocks PAST the indexed
+            # match through the in-flight map — blocks a still-active
+            # donor slot holds for the same content chain. Hits are
+            # shared now but stay PENDING until the donor's prefill
+            # actually writes them (engine promotion pass).
+            pending = self._inflight_walk(eff, shared)
+            self.pool.share([blk for blk, _, _, _ in pending])
+            fresh = self.pool.alloc(need - len(shared) - len(pending))
+            draft_fresh: Optional[list] = None
+            if fresh is not None and self.spec:
+                draft_fresh = self.pool.alloc(need)
+            if fresh is None or (self.spec and draft_fresh is None):
                 self.pool.free(shared)
+                self.pool.free([blk for blk, _, _, _ in pending])
+                if fresh is not None:
+                    self.pool.free(fresh)
                 victim = self._pick_victim(req) if self.preempt else None
                 if victim is not None and seq_of is not None:
                     self.preempt_slot(victim, now, seq_of)
@@ -418,7 +473,8 @@ class Scheduler:
             self.stall_ticks = 0
             cow = None
             if (
-                match.cow_block is not None
+                not pending  # pending region starts where cow would
+                and match.cow_block is not None
                 # The donor may have been evicted by our own alloc.
                 and self.pool.is_indexed(match.cow_block)
             ):
@@ -426,10 +482,22 @@ class Scheduler:
             self.queue.remove(entry)
             slot.state = ACTIVE
             slot.request = req
-            slot.blocks = tuple(shared) + tuple(fresh)
+            slot.blocks = (
+                tuple(shared)
+                + tuple(blk for blk, _, _, _ in pending)
+                + tuple(fresh)
+            )
             slot.length = match.tokens  # prefix-cached tokens
             slot.prefix_tokens = match.tokens + (cow[2] if cow else 0)
             slot.cow = cow
+            slot.pending_shared = [
+                (end, dslot, dseq) for _, end, dslot, dseq in pending
+            ]
+            if self.spec:
+                slot.draft_blocks = tuple(draft_fresh)
+                slot.draft_length = 0
+                slot.drafted = res.get("drafted", 0) if res else 0
+                slot.accepted = res.get("accepted", 0) if res else 0
             slot.generated = generated
             slot.budget = budget
             slot.admitted_at = (res["admitted_at"] if res is not None
@@ -449,13 +517,78 @@ class Scheduler:
             slot.deadline_at = entry.deadline_at
             slot.sub_seq = entry.seq
             self._resume.pop(req.rid, None)
+            self._inflight_register(slot)
             self.events.append((
                 now, req.rid,
                 "re-admitted" if res is not None else "admitted",
-                f"prefix_tokens={slot.prefix_tokens}",
+                f"prefix_tokens={slot.prefix_tokens}"
+                + (f" inflight_blocks={len(pending)}" if pending else ""),
             ))
             out.append(slot)
         return out
+
+    # -- in-flight prefix map -------------------------------------------
+    def _full_chains(self, eff: list):
+        """Chain hashes of eff's full blocks, capped (like the pool's
+        prefix index) so at least one token is left to prefill:
+        [(chain, end_tokens)] for blocks wholly inside [0, len-1)."""
+        bs = self.pool.block_size
+        out = []
+        parent = ""
+        b = 0
+        while (b + 1) * bs <= len(eff) - 1:
+            parent = _chain(parent, eff[b * bs:(b + 1) * bs])
+            out.append((parent, (b + 1) * bs))
+            b += 1
+        return out
+
+    def _inflight_walk(self, eff: list, shared: list):
+        """Extend a pool prefix match through the in-flight map:
+        starting at the first full block the index did NOT cover, chase
+        the content chain through blocks still-active slots hold.
+        Returns [(block_id, end_tokens, donor_slot, donor_admit_seq)]
+        for contiguous hits with a valid donor."""
+        if not self.inflight_share:
+            return []
+        hits = []
+        for chain, end in self._full_chains(eff)[len(shared):]:
+            ent = self._inflight.get(chain)
+            if ent is None:
+                break
+            dslot, blk, dend, dseq = ent
+            if (
+                dslot.state != ACTIVE
+                or dslot.admit_seq != dseq
+                or dend != end
+                or blk not in dslot.blocks
+            ):
+                break
+            hits.append((blk, end, dslot, dseq))
+        return hits
+
+    def _inflight_register(self, slot: Slot) -> None:
+        """Publish the slot's full-block content chains so later
+        admissions (same tick or while this slot is still prefilling)
+        can share its blocks before the prefix index sees them."""
+        if not self.inflight_share:
+            return
+        for bi, (chain, end) in enumerate(
+            self._full_chains(slot.eff_prompt)
+        ):
+            if bi >= len(slot.blocks):
+                break
+            self._inflight[chain] = (
+                slot, slot.blocks[bi], end, slot.admit_seq
+            )
+            slot.inflight_keys.append(chain)
+
+    def _inflight_prune(self, slot: Slot) -> None:
+        for chain in slot.inflight_keys:
+            ent = self._inflight.get(chain)
+            if (ent is not None and ent[0] is slot
+                    and ent[3] == slot.admit_seq):
+                del self._inflight[chain]
+        slot.inflight_keys = []
 
     def _pick_victim(self, req: Request) -> Optional[Slot]:
         """Youngest active slot with STRICTLY lower priority than the
@@ -481,6 +614,10 @@ class Scheduler:
             start_block=slot.reg_blocks, parent=slot.reg_parent,
         )
         self.pool.free(slot.blocks)
+        if slot.draft_blocks:
+            # Draft lanes are private and never prefix-indexed: their
+            # content is simply recomputed (catch-up) on re-admission.
+            self.pool.free(slot.draft_blocks)
         self._resume[req.rid] = {
             "seq": seq,
             "generated": slot.generated,
@@ -488,6 +625,8 @@ class Scheduler:
             "first_token_at": slot.first_token_at,
             "admitted_at": slot.admitted_at,
             "preemptions": slot.preemptions + 1,
+            "drafted": slot.drafted,
+            "accepted": slot.accepted,
         }
         self._enqueue(_QEntry(
             req=req, seq=slot.sub_seq,
@@ -504,6 +643,8 @@ class Scheduler:
     def _evict(self, slot: Slot, now: int, status: str,
                reason: str) -> None:
         self.pool.free(slot.blocks)
+        if slot.draft_blocks:
+            self.pool.free(slot.draft_blocks)
         self._record(slot.request, now, status, reason, slot=slot)
         if self.on_evict is not None:
             self.on_evict(slot)
@@ -552,10 +693,13 @@ class Scheduler:
         # refcounted pool keeps shared prefix blocks alive for their
         # other holders (and caches the content of fully released ones).
         self.pool.free(slot.blocks)
+        if slot.draft_blocks:
+            self.pool.free(slot.draft_blocks)
         self._record(slot.request, now, COMPLETED, reason, slot=slot)
         self._clear(slot)
 
     def _clear(self, slot: Slot) -> None:
+        self._inflight_prune(slot)
         slot.state = FREE
         slot.request = None
         slot.blocks = ()
@@ -574,6 +718,11 @@ class Scheduler:
         slot.ttft_at = None
         slot.deadline_at = None
         slot.sub_seq = 0
+        slot.draft_blocks = ()
+        slot.draft_length = 0
+        slot.drafted = 0
+        slot.accepted = 0
+        slot.pending_shared = []
 
     # -- queries --------------------------------------------------------
     @property

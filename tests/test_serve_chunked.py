@@ -385,3 +385,38 @@ def test_streaming_through_chunked_path(chunked_engine):
     )
     assert [t for _, t in got] == outs[0][len(prompt):]
     assert stats[0]["first_token_at"] >= 2  # really was chunked
+
+
+def test_inflight_prefix_sharing_same_tick_burst(granite):
+    """Same-tick admissions with one shared prompt: the prefix index
+    has nothing yet (the donor is still prefilling), but the in-flight
+    map lets followers map the donor's full blocks immediately —
+    pending until the donor's computed length passes them, then
+    promoted without burning chunk lanes. Outputs stay exact and the
+    hits surface in prefix_hit_frac."""
+    cfg, vals = granite
+    mk_sc = lambda **kw: ServeConfig(  # noqa: E731
+        max_batch=3, max_len=64, paged=True, block_size=BS,
+        chunk_size=8, chunks_per_step=2, audit_invariants=True, **kw
+    )
+    prompt = [(13 * i) % 97 + 1 for i in range(18)]  # 2 full blocks
+    mk = lambda: [  # noqa: E731
+        Request(rid=r, prompt=list(prompt), max_new=5, arrival=0)
+        for r in range(3)
+    ]
+    eng = ServeEngine(vals, cfg, mk_sc())
+    outs, stats = eng.serve(mk())
+    es = eng.last_stats
+    # 2 followers x 2 full blocks promoted from the donor's writes
+    assert es["inflight_promotions"] == 4
+    assert es["prefix_hit_frac"] > 0.5
+    solo = ServeEngine(vals, cfg, mk_sc())
+    souts, _ = solo.serve([mk()[0]])
+    for r in range(3):
+        assert outs[r][len(prompt):] == souts[0][len(prompt):]
+    # the followers' prefill work actually disappeared
+    cold = ServeEngine(vals, cfg, mk_sc(prefix_cache=False))
+    couts, _ = cold.serve(mk())
+    assert couts == outs
+    assert (cold.last_stats["chunk_rows_used"]
+            > es["chunk_rows_used"] * 2)

@@ -1,0 +1,304 @@
+"""Speculative decoding on the paged engine: draft construction, exact
+rejection sampling, greedy/temperature parity with vanilla decoding,
+fixed jit signatures, and chaos interaction.
+
+The load-bearing contracts:
+
+* greedy speculative == greedy vanilla token-for-token, for ANY draft
+  (greedy accepts a draft iff it IS the target argmax);
+* at temperature, the drafted token for output index n comes from the
+  SAME (seed0, rid, n) stream as vanilla sampling, so a draft whose
+  distribution equals the target's (q == p — exactly what a freshly
+  upcycled copy-init + normalized checkpoint gives its dense parent)
+  accepts everything and reproduces vanilla bit-for-bit;
+* one compiled signature per model: the target runs ONLY the verify
+  step, the draft one decode-step + one catch-up-prefill signature.
+
+Set REPRO_SPEC=1 to widen the acceptance seed sweep (more rngs) — the
+verify script's spec lane does.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.upcycle import upcycle_params
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.models.draft import dense_parent_params, make_draft, top1_cfg
+from repro.serve import ChaosConfig, Request, ServeConfig, ServeEngine
+from repro.serve.speculative import (
+    draft_probs,
+    sample_token,
+    verify_accept,
+)
+
+BS = 8
+
+
+def _dropless(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = _dropless(get_reduced("granite-moe-1b-a400m"))
+    p = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    vals, _ = pm.split(p)
+    return cfg, vals
+
+
+@pytest.fixture(scope="module")
+def upcycled():
+    """Freshly upcycled checkpoint: copy-init + normalized combine, so
+    the MoE's output distribution EQUALS the dense parent's (q == p)."""
+    cfg = dataclasses.replace(
+        _dropless(get_reduced("granite-moe-1b-a400m")),
+        moe=dataclasses.replace(
+            _dropless(get_reduced("granite-moe-1b-a400m")).moe,
+            normalize_combine_weights=True,
+        ),
+    )
+    dense_cfg = cfg.dense_parent()
+    dp = zoo.init_params(jax.random.PRNGKey(1), dense_cfg)
+    up = upcycle_params(dp, dense_cfg, cfg, jax.random.PRNGKey(2))
+    vals, _ = pm.split(up)
+    dvals, _ = pm.split(dp)
+    return cfg, vals, dense_cfg, dvals
+
+
+def _engine(pair, **kw):
+    cfg, vals = pair
+    base = dict(max_batch=3, max_len=64, paged=True, block_size=BS,
+                chunk_size=8, chunks_per_step=2)
+    base.update(kw)
+    return ServeEngine(vals, cfg, ServeConfig(**base))
+
+
+def _reqs():
+    # staggered arrivals, varied prompt lengths, a budget=1 tail case
+    return [
+        Request(rid=0, prompt=[5, 9, 3, 7, 2, 11], max_new=10,
+                arrival=0),
+        Request(rid=1, prompt=[8, 1, 4], max_new=1, arrival=0),
+        Request(rid=2, prompt=[5, 9, 3, 7, 2, 11, 6, 6, 13, 2],
+                max_new=7, arrival=2),
+        Request(rid=3, prompt=[42, 17], max_new=9, arrival=4),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# draft construction (host-only)
+# ---------------------------------------------------------------------------
+
+
+def test_dense_parent_extraction_is_exact(upcycled):
+    """Slicing expert 0 out of a copy-init upcycled checkpoint returns
+    the original dense parent bit-for-bit."""
+    cfg, vals, dense_cfg, dvals = upcycled
+    ext_vals, ext_cfg = dense_parent_params(vals, cfg)
+    assert ext_cfg.moe is None
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)
+        ),
+        ext_vals, dvals,
+    )
+
+
+def test_make_draft_kinds(granite):
+    cfg, vals = granite
+    assert make_draft(vals, cfg, "none") == (None, None)
+    p1, c1 = make_draft(vals, cfg, "top1")
+    assert p1 is vals and c1.moe.top_k == 1
+    assert top1_cfg(cfg).name.endswith("-top1")
+    with pytest.raises(ValueError, match="unknown draft kind"):
+        make_draft(vals, cfg, "medusa")
+
+
+def test_spec_config_validation(granite):
+    cfg, vals = granite
+    with pytest.raises(ValueError, match="draft kind"):
+        _engine(granite, draft="medusa")
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(granite, draft="top1", spec_k=0)
+    with pytest.raises(ValueError, match="chunked"):
+        _engine(granite, draft="top1", admission="prefill_on_join")
+
+
+# ---------------------------------------------------------------------------
+# exact rejection sampling (host-only unit)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_accept_greedy_prefix_semantics():
+    rng = np.random.default_rng(0)
+    p_rows = rng.normal(size=(4, 16))
+    arg = [int(r.argmax()) for r in p_rows]
+    # all drafts match -> full accept + bonus from the last row
+    emitted, acc = verify_accept(arg[:3], [None] * 3, p_rows, 0.0,
+                                 1, 2, 0)
+    assert acc == 3 and emitted == arg[:3] + [arg[3]]
+    # mismatch at j=1 -> accept 1, emit the target argmax, stop
+    drafts = [arg[0], (arg[1] + 1) % 16, arg[2]]
+    emitted, acc = verify_accept(drafts, [None] * 3, p_rows, 0.0,
+                                 1, 2, 0)
+    assert acc == 1 and emitted == [arg[0], arg[1]]
+    # k == 0 degenerates to one vanilla draw
+    emitted, acc = verify_accept([], [], p_rows[:1], 0.0, 1, 2, 5)
+    assert acc == 0 and emitted == [arg[0]]
+
+
+def test_verify_accept_identity_when_q_equals_p():
+    """The rejection-sampling identity: q == p accepts every draft and
+    the bonus draw IS the vanilla draw — for any seed."""
+    rng = np.random.default_rng(1)
+    p_rows = rng.normal(size=(3, 32))
+    tau, seed0, rid, n0 = 0.7, 99, 4, 6
+    q_rows = [draft_probs(p_rows[j], tau) for j in range(2)]
+    drafts = [sample_token(p_rows[j], tau, seed0, rid, n0 + j)
+              for j in range(2)]
+    emitted, acc = verify_accept(drafts, q_rows, p_rows, tau,
+                                 seed0, rid, n0)
+    assert acc == 2
+    assert emitted == drafts + [
+        sample_token(p_rows[2], tau, seed0, rid, n0 + 2)
+    ]
+
+
+def test_verify_accept_rejection_samples_residual():
+    """A draft the target gives ~zero mass is rejected and the
+    correction comes from norm(max(p - q, 0)) — never the draft."""
+    V = 8
+    p = np.zeros(V)
+    p[3] = 30.0  # softmax ~ one-hot on 3
+    q = np.full(V, 1.0 / V)
+    for seed in range(20):
+        emitted, acc = verify_accept([5], [q], p[None], 1.0,
+                                     seed, 0, 0)
+        assert acc == 0 and emitted == [3]
+
+
+# ---------------------------------------------------------------------------
+# engine parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["top1", "dense"])
+def test_greedy_spec_equals_greedy_vanilla(granite, kind):
+    """Greedy speculative emits the vanilla chain token-for-token
+    across a staggered batch (incl. a budget=1 request), with a single
+    compiled signature per model and fewer target steps."""
+    o0, f0 = _engine(granite).serve(_reqs())
+    eng = _engine(granite, draft=kind, spec_k=3)
+    o1, f1 = eng.serve(_reqs())
+    assert o1 == o0
+    s = eng.last_stats
+    assert s["compile_count"] == 1  # the verify step IS the target step
+    assert s["draft_compile_count"] == 2  # draft decode + catch-up
+    assert s["spec_drafted"] > 0
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+    assert s["spec"]["draft"] == kind and s["spec"]["k"] == 3
+    # per-request draft accounting survives into the finish records
+    assert sum(rec["drafted"] for rec in f1.values()) == (
+        s["spec_drafted"]
+    )
+    assert sum(rec["accepted"] for rec in f1.values()) == (
+        s["spec_accepted"]
+    )
+
+
+def test_spec_never_overshoots_budget(granite):
+    """A verify pass emits up to k_eff + 1 tokens; k_eff is clamped so
+    the slot never exceeds its token budget."""
+    eng = _engine(granite, draft="top1", spec_k=4)
+    reqs = [Request(rid=r, prompt=[3 + r, 9, 1], max_new=1 + r,
+                    arrival=0) for r in range(3)]
+    outs, fin = eng.serve(reqs)
+    for r in range(3):
+        assert len(outs[r]) - 3 <= 1 + r
+        assert fin[r]["generated"] <= 1 + r
+
+
+def test_temperature_identity_on_upcycled_checkpoint(upcycled):
+    """models/draft extracts the dense parent from the upcycled MoE;
+    copy-init + normalized combine means q == p, so speculative
+    decoding at temperature reproduces vanilla EXACTLY with acceptance
+    rate 1.0 — the end-to-end rejection-sampling identity."""
+    cfg, vals, _, _ = upcycled
+    pair = (cfg, vals)
+    rngs = ((7, 11, 13) if os.environ.get("REPRO_SPEC") else (7,))
+    for r in rngs:
+        rng = jax.random.PRNGKey(r)
+        base = dict(temperature=0.8)
+        o0, _ = _engine(pair, **base).serve(_reqs(), rng=rng)
+        eng = _engine(pair, draft="dense", spec_k=3, **base)
+        o1, _ = eng.serve(_reqs(), rng=rng)
+        assert o1 == o0, f"rng {r}: identity broke"
+        s = eng.last_stats
+        assert s["acceptance_rate"] == 1.0
+        assert s["spec_drafted"] > 0
+        # full acceptance -> ~k+1 tokens per target pass: far fewer
+        # target steps than the one-token-per-step vanilla loop
+        assert s["mixed_steps"] * (eng.sc.spec_k + 1) >= s[
+            "spec_accepted"
+        ]
+
+
+def test_spec_under_chaos_keeps_invariants_and_parity(granite):
+    """Seeded chaos (evictions, holds, bursts) with speculative
+    decoding on: BlockPool invariants (incl. draft-lane refcounts)
+    audited green every tick, zero leaks at drain, one signature per
+    model, and greedy parity for whatever completed."""
+    mk = lambda: [  # noqa: E731
+        Request(rid=rid,
+                prompt=[(37 * rid + 11 * i) % 97 + 1
+                        for i in range(10 + (3 * rid) % 12)],
+                max_new=4 + rid % 4, arrival=rid)
+        for rid in range(5)
+    ]
+    clean_outs, _ = _engine(granite).serve(mk())
+    seeds = range(3) if os.environ.get("REPRO_SPEC") else range(2)
+    for seed in seeds:
+        eng = _engine(
+            granite, draft="top1", spec_k=3,
+            num_blocks=1 + 24, preempt=True,
+            queue_limit=8, queue_policy="shed-newest",
+            watchdog_ticks=16,
+            chaos=ChaosConfig(
+                seed=seed, evict_prob=0.15, hold_prob=0.2,
+                hold_max_blocks=3, hold_ticks=2, burst_prob=0.1,
+                burst_size=2, burst_plen=9, burst_max_new=3,
+            ),
+        )
+        outs, stats = eng.serve(mk())
+        es = eng.last_stats
+        assert es["audits"] > es["mixed_steps"]
+        assert es["compile_count"] == 1
+        assert sum(es["status_counts"].values()) == len(stats)
+        for rid, rec in stats.items():
+            if rid < 5 and rec["status"] == "completed":
+                assert outs[rid] == clean_outs[rid], (
+                    f"seed {seed} rid {rid}: chaos+spec broke parity"
+                )
+
+
+def test_spec_oversized_request_fails_clean(granite):
+    """The doubled (target + draft lane) footprint makes a request
+    structurally unadmittable -> the watchdog fails it with a
+    diagnostic; the engine drains without wedging or leaking."""
+    eng = _engine(granite, draft="top1", spec_k=2, num_blocks=1 + 8,
+                  max_batch=1, watchdog_ticks=4)
+    big = Request(rid=0, prompt=list(range(1, 33)), max_new=8,
+                  arrival=0)
+    small = Request(rid=1, prompt=[4, 2], max_new=4, arrival=0)
+    outs, fin = eng.serve([big, small])
+    assert fin[0]["status"] == "failed"
+    assert fin[1]["status"] == "completed"
