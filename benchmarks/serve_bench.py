@@ -660,6 +660,169 @@ def run_speculative() -> list[tuple[str, float, str]]:
     ]
 
 
+def run_fleet() -> list[tuple[str, float, str]]:
+    """Fleet scenario (ISSUE 8 acceptance): the at-capacity overload
+    trace on ONE engine vs a 3-replica :class:`Fleet` with replica 0
+    killed mid-trace (deterministic ``FleetChaosConfig`` kill). The
+    kill migrates the corpse's queued + active work to the survivors
+    with saved progress, so the fleet's completed-request ratio must
+    stay >= the unchaosed solo ratio, and the p99 TTFT of COMPLETED
+    requests must stay <= 1.5x the solo p99 — one replica dying
+    degrades into migrations, never into lost/duplicated requests or
+    a latency collapse. Results merge into BENCH_serve.json; the
+    routing-signal timeline lands next to it as
+    BENCH_fleet_timeline.jsonl."""
+    from repro.serve import (
+        Fleet,
+        FleetChaosConfig,
+        FleetConfig,
+        Request,
+        ServeConfig,
+        ServeEngine,
+    )
+
+    cfg, vals = _build()
+    n = 16 if SMOKE else 48
+    mean_ia = 3.0  # ~at-capacity for ONE engine (see run_overload)
+    trace = _trace_overload(n, mean_ia, np.random.default_rng(23))
+    # Kill replica 0 halfway through the arrival window: the fleet is
+    # mid-decode with more work still arriving.
+    kill_tick = int(max(r["arrival"] for r in trace)) // 2
+
+    base = dict(max_batch=4, max_len=64, paged=True, block_size=8,
+                chunk_size=8, chunks_per_step=2, audit_invariants=True)
+    # ONE engine object serves solo AND every fleet replica: sessions
+    # are self-contained (own pool/scheduler/KV), so sharing the object
+    # shares only params + jitted steps — one compile for the whole
+    # scenario.
+    eng = ServeEngine(vals, cfg, ServeConfig(**base))
+
+    def mk():
+        return [
+            Request(rid=r["rid"], prompt=list(r["prompt"]),
+                    max_new=r["max_new"], arrival=r["arrival"])
+            for r in trace
+        ]
+
+    def solo_once():
+        t0 = time.perf_counter()
+        _, stats = eng.serve(mk())
+        return time.perf_counter() - t0, stats, dict(eng.last_stats)
+
+    eng.serve(mk())  # warm (jit compiles; replicas reuse them)
+    s_wall, s_stats, s_es = min(
+        (solo_once() for _ in range(2)), key=lambda r: r[0]
+    )
+
+    tl_path = os.path.join(
+        os.path.dirname(BENCH_JSON), "BENCH_fleet_timeline.jsonl"
+    )
+
+    def fleet_once():
+        fleet = Fleet(eng, FleetConfig(
+            num_engines=3,
+            timeline_path=tl_path,
+            chaos=FleetChaosConfig(kills=((kill_tick, 0),)),
+        ))
+        t0 = time.perf_counter()
+        _, fin = fleet.run(mk())
+        return time.perf_counter() - t0, fin, dict(fleet.last_stats)
+
+    f_wall, f_fin, f_es = min(
+        (fleet_once() for _ in range(2)), key=lambda r: r[0]
+    )
+
+    def summary(stats, wall):
+        completed = [s for s in stats.values()
+                     if s["status"] == "completed"]
+        ttft = [s["first_token_at"] - s["arrival"] for s in completed]
+        useful = sum(s["generated"] for s in completed)
+        return {
+            "requests": len(stats),
+            "completed": len(completed),
+            "completed_ratio": round(len(completed) / len(stats), 3),
+            "useful_tokens": int(useful),
+            "tokens_per_s": round(useful / wall, 1) if wall else 0.0,
+            "ttft_ticks": {
+                "p50": float(np.percentile(ttft, 50)),
+                "p99": float(np.percentile(ttft, 99)),
+            },
+        }
+
+    solo = summary(s_stats, s_wall)
+    three = summary(f_fin, f_wall)
+    three.update({
+        "num_engines": 3,
+        "kill_tick": kill_tick,
+        "kills": int(f_es["kills"]),
+        "migrations": int(f_es["migrations"]),
+        "retries": int(f_es["retries"]),
+        "fleet_ticks": int(f_es["ticks"]),
+        "timeline_rows": int(f_es["timeline_rows"]),
+        "status_counts": dict(f_es["status_counts"]),
+    })
+
+    # Acceptance gates (failures fail the bench, not just the report).
+    assert f_es["kills"] == 1, f_es["kills"]
+    assert three["completed_ratio"] >= solo["completed_ratio"], (
+        f"fleet with a mid-trace kill completed "
+        f"{three['completed_ratio']} of requests vs solo "
+        f"{solo['completed_ratio']} — failover lost work"
+    )
+    ttft_bound = 1.5 * max(solo["ttft_ticks"]["p99"], 1.0)
+    assert three["ttft_ticks"]["p99"] <= ttft_bound, (
+        f"fleet p99 TTFT {three['ttft_ticks']['p99']} ticks exceeds "
+        f"1.5x solo p99 ({ttft_bound}) despite 3x capacity"
+    )
+
+    # Merge into the perf-trajectory artifact run_overload() writes.
+    artifact = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            artifact = json.load(f)
+    artifact["fleet"] = {
+        "smoke": SMOKE,
+        "model": cfg.name,
+        "scenarios": {"solo_1x": solo, "fleet_3x_kill": three},
+        "criterion": {
+            "completed_ratio_vs_solo":
+                round(three["completed_ratio"]
+                      / max(solo["completed_ratio"], 1e-9), 3),
+            "ttft_p99_bound_ticks": ttft_bound,
+            "pass": True,
+        },
+        "timeline_path": os.path.relpath(
+            tl_path, os.path.dirname(BENCH_JSON)),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    def row(name, s, wall, extra=""):
+        return (
+            f"serve/fleet_{name}",
+            0.0 if s["tokens_per_s"] == 0 else 1e6 / s["tokens_per_s"],
+            f"tokens_per_s={s['tokens_per_s']} "
+            f"completed={s['completed']}/{s['requests']} "
+            f"ttft_p99={s['ttft_ticks']['p99']:.0f}" + extra,
+        )
+
+    return [
+        row("solo_1x", solo, s_wall),
+        row("3x_kill", three, f_wall,
+            f" kills={three['kills']} migrations={three['migrations']}"
+            f" kill_tick={kill_tick}"),
+        (
+            "serve/fleet_criterion",
+            0.0,
+            f"completed_ratio={three['completed_ratio']} "
+            f"(solo {solo['completed_ratio']}) "
+            f"ttft_p99={three['ttft_ticks']['p99']:.0f} "
+            f"(bound {ttft_bound:.0f}) -> BENCH_serve.json",
+        ),
+    ]
+
+
 def run() -> list[tuple[str, float, str]]:
     from repro.serve import ServeConfig, ServeEngine
 
@@ -724,4 +887,5 @@ def run() -> list[tuple[str, float, str]]:
     rows.extend(run_bursty())
     rows.extend(run_overload())
     rows.extend(run_speculative())
+    rows.extend(run_fleet())
     return rows

@@ -24,6 +24,14 @@ bounds zero-progress spins, ``--chaos SEED`` turns on the seeded fault
 injector. ``--overload`` serves a deliberately over-subscribed trace so
 sheds/timeouts/preemptions actually fire and the per-status accounting
 is visible.
+
+``--fleet`` demonstrates the replica pool (``repro/serve/fleet.py``):
+the same requests served solo and through 3 replica sessions of the
+same engine with replica 0 killed mid-decode — its queued + active
+work migrates to the survivors with saved progress and the outputs are
+verified token-identical to the unchaosed solo run (sampling is keyed
+on (rid, position), so re-execution elsewhere replays the same
+stream).
 """
 import argparse
 import dataclasses
@@ -36,7 +44,8 @@ from repro.core.upcycle import upcycle_params
 from repro.models import model_zoo as zoo
 from repro.models import param as pm
 from repro.serve import (
-    ChaosConfig, Request, ServeConfig, ServeEngine, blocks_needed,
+    ChaosConfig, Fleet, FleetChaosConfig, FleetConfig, Request,
+    ServeConfig, ServeEngine, blocks_needed,
 )
 
 
@@ -110,6 +119,53 @@ def serve_overload(params, sparse_cfg, sc, args):
         print(f"  chaos: {es['chaos']}")
 
 
+def serve_fleet(params, sparse_cfg, sc):
+    """3 replicas of ONE engine (sessions are self-contained, so they
+    share only params and jitted steps), replica 0 killed at tick 6 —
+    mid-decode for the early arrivals. The fleet migrates its work and
+    the outputs match the unchaosed solo run token for token."""
+    eng = ServeEngine(params, sparse_cfg, sc)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 250, size=10) for _ in range(6)]
+
+    def mk():
+        return [
+            Request(rid=i, arrival=2 * i,
+                    prompt=[int(t) for t in prompts[i]], max_new=8)
+            for i in range(6)
+        ]
+    print("[serve] solo baseline (1 engine, no chaos):")
+    solo_outs, solo_stats = eng.serve(mk())
+    print(f"  {len(solo_outs)} requests completed, "
+          f"{eng.last_stats['mixed_steps']} mixed steps")
+
+    print("[serve] fleet: 3 replicas, engine 0 killed at tick 6:")
+    fleet = Fleet(eng, FleetConfig(
+        num_engines=3,
+        chaos=FleetChaosConfig(kills=((6, 0),)),
+    ))
+    outs, stats = fleet.run(
+        mk(),
+        on_event=lambda rid, ev, detail: print(
+            f"  [event] req{rid}: {ev}" + (f" ({detail})" if detail else "")
+        ),
+    )
+    for rid in sorted(stats):
+        s = stats[rid]
+        match = "==" if outs[rid] == solo_outs[rid] else "!="
+        print(f"  request {rid}: status={s['status']} "
+              f"engine={s['engine']} migrations={s['migrations']} "
+              f"tokens {match} solo")
+        assert outs[rid] == solo_outs[rid], (
+            f"rid {rid}: fleet output diverged from solo"
+        )
+    es = fleet.last_stats
+    print(f"  fleet: ticks={es['ticks']} "
+          f"status_counts={es['status_counts']} kills={es['kills']} "
+          f"migrations={es['migrations']} retries={es['retries']}")
+    print("  all outputs token-identical to the solo run")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true")
@@ -120,6 +176,10 @@ def main():
     rb.add_argument("--overload", action="store_true",
                     help="serve an over-subscribed trace so the "
                          "robustness paths (shed/timeout/preempt) fire")
+    rb.add_argument("--fleet", action="store_true",
+                    help="serve through 3 replicas with one killed "
+                         "mid-decode; outputs verified token-identical "
+                         "to the unchaosed solo run")
     rb.add_argument("--queue-limit", type=int, default=0,
                     help="max visible waiting requests (0 = unbounded)")
     rb.add_argument("--queue-policy", default="block",
@@ -148,8 +208,8 @@ def main():
     params, sparse_cfg = build()
     prompts = [[10, 42, 7], [99, 3], [5, 5, 5, 5], [200, 17]]
 
-    if args.overload and not args.paged:
-        ap.error("--overload requires --paged")
+    if (args.overload or args.fleet) and not args.paged:
+        ap.error("--overload/--fleet require --paged")
     if args.paged:
         chaos = (ChaosConfig(seed=args.chaos, evict_prob=0.1,
                              hold_prob=0.15, burst_prob=0.1,
@@ -170,6 +230,8 @@ def main():
         )
         if args.overload:
             return serve_overload(params, sparse_cfg, sc, args)
+        if args.fleet:
+            return serve_fleet(params, sparse_cfg, sc)
         eng = ServeEngine(params, sparse_cfg, sc)
         # 5 requests through 2 slots: later arrivals queue and are
         # admitted mid-flight as earlier requests finish and free their

@@ -50,6 +50,15 @@ echo "[verify] spec lane: speculative parity sweep (REPRO_SPEC=1, wider seeds)"
 # way REPRO_CHAOS widens the fault-injection sweep.
 REPRO_SPEC=1 python -m pytest -x -q tests/test_speculative.py
 
+echo "[verify] fleet lane: multi-engine chaos sweep (REPRO_FLEET=1, wider seeds)"
+# tests/test_fleet.py runs in tier-1 above with a 2-seed chaos sweep;
+# REPRO_FLEET=1 widens the fleet-level fault-injection sweep (seeded
+# engine kills mid-decode, heartbeat loss, slow-engine degradation —
+# every request must reach exactly ONE fleet-terminal status, migrated
+# greedy completions stay token-identical to the unchaosed solo run,
+# and every surviving pool passes its per-tick invariant audit).
+REPRO_FLEET=1 python -m pytest -x -q tests/test_fleet.py
+
 echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM
@@ -63,7 +72,10 @@ echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # (~2x sustainable arrival rate, shedding + TTFT deadlines) AND the
 # speculative scenario (--draft none vs dense vs top1 on an upcycled
 # checkpoint: the dense parent drafts at ~1.0 acceptance and must beat
-# vanilla decode tokens/s by >= 1.3x at smoke scale, >= 2x full) that
+# vanilla decode tokens/s by >= 1.3x at smoke scale, >= 2x full) AND
+# the fleet scenario (1 engine vs 3 replicas with one killed
+# mid-trace: completed-request ratio must hold and p99 TTFT stays
+# bounded through the failover) that
 # writes the BENCH_serve.json perf-trajectory artifact; the paged
 # serve subsystem's tests themselves — tests/test_paged_decode.py,
 # test_paged_prefill.py, test_serve_paged.py, test_serve_chunked.py,

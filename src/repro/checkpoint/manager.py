@@ -5,6 +5,11 @@ Fault-tolerance contract (DESIGN.md §5):
     never corrupt the latest valid checkpoint;
   * ``restore_latest`` scans for the newest *valid* step, skipping
     partial directories left by crashes;
+  * transient store IO failures (flaky NFS/object-store mounts under
+    fleet restart pressure) are retried with capped exponential backoff
+    (``io_retries`` / ``io_backoff`` / ``io_backoff_cap``) before the
+    error escapes — and ``restore_latest`` then still falls back to the
+    last-known-good step;
   * ``save_async`` snapshots to host memory synchronously (cheap) and
     writes on a background thread so the train loop keeps stepping —
     ``wait()`` joins before the next async save or process exit;
@@ -16,7 +21,8 @@ from __future__ import annotations
 import os
 import re
 import threading
-from typing import Any, Optional
+import time
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -33,12 +39,53 @@ class CheckpointManager:
         *,
         max_to_keep: int = 3,
         keep_period: Optional[int] = None,
+        io_retries: int = 2,
+        io_backoff: float = 0.05,
+        io_backoff_cap: float = 1.0,
+        fault_hook: Optional[Callable[[str, int], None]] = None,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.directory = directory
         self.max_to_keep = max_to_keep
         self.keep_period = keep_period
+        # Transient-IO retry policy: each store read/write gets
+        # io_retries extra attempts with min(cap, backoff * 2**attempt)
+        # seconds between them. fault_hook(op, attempt) is called before
+        # EVERY attempt — tests inject transient failures by raising
+        # from it; sleep is injectable so backoff tests don't wait.
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
+        self.io_backoff_cap = io_backoff_cap
+        self.fault_hook = fault_hook
+        self._sleep = sleep
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+
+    # -- transient-IO retry ---------------------------------------------
+    def _with_retries(self, op: str, fn: Callable[[], Any]) -> Any:
+        """Run a store IO op, retrying transient failures with capped
+        exponential backoff. ValueError (structure/shape mismatch — a
+        caller bug, deterministic) is never retried."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(op, attempt)
+                return fn()
+            except ValueError:
+                raise
+            except Exception as e:
+                if attempt >= self.io_retries:
+                    raise
+                delay = min(self.io_backoff_cap,
+                            self.io_backoff * (2 ** attempt))
+                print(
+                    f"[checkpoint] {op} failed "
+                    f"({type(e).__name__}: {e}); retry "
+                    f"{attempt + 1}/{self.io_retries} in {delay:.3f}s"
+                )
+                self._sleep(delay)
+                attempt += 1
 
     # -- paths ----------------------------------------------------------
     def step_path(self, step: int) -> str:
@@ -67,7 +114,8 @@ class CheckpointManager:
         meta["step"] = step
 
         def _write():
-            store.save_tree(self.step_path(step), host_tree, metadata=meta)
+            self._with_retries("save", lambda: store.save_tree(
+                self.step_path(step), host_tree, metadata=meta))
             self._gc()
 
         if blocking:
@@ -87,9 +135,9 @@ class CheckpointManager:
 
     # -- restore ---------------------------------------------------------
     def restore(self, step: int, like: Any, *, shardings: Any = None):
-        return store.load_tree(
+        return self._with_retries("restore", lambda: store.load_tree(
             self.step_path(step), like, shardings=shardings
-        )
+        ))
 
     def restore_latest(self, like: Any, *, shardings: Any = None):
         """Returns (tree, step, metadata) or (None, None, None).
@@ -98,16 +146,22 @@ class CheckpointManager:
         checkpoint fails to load anyway (torn leaf file from a partial
         write on a non-fsync filesystem, bit rot, truncation), it is
         logged and the next-newest valid checkpoint is tried instead of
-        killing the restart loop. Structure/shape mismatches
-        (ValueError) still raise — that is a caller bug, and silently
-        resuming an older incompatible state would hide it.
+        killing the restart loop. Transient IO errors are retried with
+        backoff FIRST (``_with_retries``); only a persistently failing
+        step falls back. Structure/shape mismatches (ValueError) still
+        raise — that is a caller bug, and silently resuming an older
+        incompatible state would hide it.
         """
         last_err = None
         for step in reversed(self.all_steps()):
             path = self.step_path(step)
             try:
                 return (
-                    store.load_tree(path, like, shardings=shardings),
+                    self._with_retries(
+                        "restore_latest",
+                        lambda p=path: store.load_tree(
+                            p, like, shardings=shardings),
+                    ),
                     step,
                     store.load_metadata(path),
                 )

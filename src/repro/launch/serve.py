@@ -33,6 +33,19 @@ pool holds, admission bursts, deadline storms) for soak testing.
 Requests end in exactly one terminal status (completed / shed /
 timeout / failed), printed per request and aggregated in the engine
 stats line.
+
+Fleet mode (``--fleet N``, paged + chunked admission only) drives N
+replica sessions of the engine behind the health-checked router
+(``repro/serve/fleet.py``): ``--fleet-kill TICK:EID`` arms
+deterministic engine kills (repeatable), ``--fleet-hedge-after``
+enables hedged re-dispatch for stragglers, ``--fleet-restart-after``
+rejoins killed engines after a delay — with ``--ckpt-dir`` the
+replacement engine is rebuilt from the latest checkpoint
+(restart-from-checkpoint), otherwise the dead replica's params are
+reused — and ``--fleet-timeline`` streams the per-tick routing-signal
+JSONL (schema on ``repro.serve.TimelineWriter``). Per-request records
+gain ``engine`` / ``migrations`` / ``retries``; the stats line
+aggregates across replicas.
 """
 from __future__ import annotations
 
@@ -95,49 +108,79 @@ def main() -> None:
                          "the stuck head")
     rb.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="arm the seeded fault injector")
+    fl = ap.add_argument_group("fleet (paged + chunked admission)")
+    fl.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through N replica sessions behind the "
+                         "health-checked router (0/1 = solo engine)")
+    fl.add_argument("--fleet-kill", action="append", default=[],
+                    metavar="TICK:EID",
+                    help="kill engine EID at fleet tick TICK "
+                         "(repeatable; work migrates to survivors)")
+    fl.add_argument("--fleet-hedge-after", type=int, default=0,
+                    help="ticks without progress before a hedged "
+                         "duplicate dispatch (0 = off)")
+    fl.add_argument("--fleet-restart-after", type=int, default=0,
+                    help="ticks after death before a fresh engine "
+                         "rejoins (0 = never; with --ckpt-dir the "
+                         "replacement reloads the latest checkpoint)")
+    fl.add_argument("--fleet-timeline", default="",
+                    metavar="PATH",
+                    help="write the per-tick routing-signal JSONL here")
     args = ap.parse_args()
+    if args.fleet > 1 and not (args.paged
+                               and args.admission == "chunked"):
+        ap.error("--fleet needs --paged with --admission chunked")
 
     from repro.configs import get_config, get_reduced
     from repro.models import model_zoo as zoo
     from repro.models import param as pm
-    from repro.serve import ChaosConfig, Request, ServeConfig, ServeEngine
+    from repro.serve import (
+        ChaosConfig,
+        Fleet,
+        FleetChaosConfig,
+        FleetConfig,
+        Request,
+        ServeConfig,
+        ServeEngine,
+    )
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
-    params, _ = pm.split(wrapped)
-    if args.ckpt_dir:
-        from repro.checkpoint import CheckpointManager
 
-        mgr = CheckpointManager(args.ckpt_dir)
-        like = {"params": params}
-        restored, step, _ = mgr.restore_latest(like)
-        if restored is not None:
-            params = restored["params"]
-            print(f"[serve] loaded checkpoint step {step}")
+    def load_params():
+        wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
+        p, _ = pm.split(wrapped)
+        if args.ckpt_dir:
+            from repro.checkpoint import CheckpointManager
 
+            mgr = CheckpointManager(args.ckpt_dir)
+            restored, step, _ = mgr.restore_latest({"params": p})
+            if restored is not None:
+                p = restored["params"]
+                print(f"[serve] loaded checkpoint step {step}")
+        return p
+
+    params = load_params()
     chaos = (ChaosConfig(seed=args.chaos, evict_prob=0.1, hold_prob=0.15,
                          burst_prob=0.1, storm_prob=0.05)
              if args.chaos is not None else None)
-    eng = ServeEngine(
-        params, cfg,
-        ServeConfig(max_batch=args.max_batch, max_len=256,
-                    temperature=args.temperature,
-                    paged=args.paged, block_size=args.block_size,
-                    admission=args.admission,
-                    chunk_size=args.chunk_size,
-                    chunks_per_step=args.chunks_per_step,
-                    prefix_cache=not args.no_prefix_cache,
-                    draft=args.draft, spec_k=args.spec_k,
-                    queue_limit=args.queue_limit,
-                    queue_policy=args.queue_policy,
-                    shed_occupancy=args.shed_occupancy,
-                    shed_stall_ticks=args.shed_stall_ticks,
-                    preempt=args.preempt,
-                    default_ttft_deadline=args.ttft_deadline,
-                    default_deadline=args.deadline,
-                    watchdog_ticks=args.watchdog_ticks,
-                    chaos=chaos),
-    )
+    sc = ServeConfig(max_batch=args.max_batch, max_len=256,
+                     temperature=args.temperature,
+                     paged=args.paged, block_size=args.block_size,
+                     admission=args.admission,
+                     chunk_size=args.chunk_size,
+                     chunks_per_step=args.chunks_per_step,
+                     prefix_cache=not args.no_prefix_cache,
+                     draft=args.draft, spec_k=args.spec_k,
+                     queue_limit=args.queue_limit,
+                     queue_policy=args.queue_policy,
+                     shed_occupancy=args.shed_occupancy,
+                     shed_stall_ticks=args.shed_stall_ticks,
+                     preempt=args.preempt,
+                     default_ttft_deadline=args.ttft_deadline,
+                     default_deadline=args.deadline,
+                     watchdog_ticks=args.watchdog_ticks,
+                     chaos=chaos)
+    eng = ServeEngine(params, cfg, sc)
     demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
     if args.paged:
         # Staggered arrivals show mid-flight admission; --stream prints
@@ -156,6 +199,47 @@ def main() -> None:
                 + (f" ({detail})" if detail else ""), flush=True))
             if args.admission == "chunked" else None
         )
+        if args.fleet > 1:
+            kills = tuple(
+                (int(t), int(e))
+                for t, e in (spec.split(":") for spec in args.fleet_kill)
+            )
+            restart_factory = None
+            if args.fleet_restart_after:
+                def restart_factory(eid):
+                    # Restart-from-checkpoint: a rejoining engine is
+                    # rebuilt from the latest valid step (or fresh
+                    # params without --ckpt-dir), not the corpse's
+                    # in-memory state.
+                    print(f"[serve] engine {eid}: rebuilding replica "
+                          f"from {args.ckpt_dir or 'fresh params'}")
+                    return ServeEngine(load_params(), cfg, sc)
+            fleet = Fleet(eng, FleetConfig(
+                num_engines=args.fleet,
+                hedge_after=args.fleet_hedge_after,
+                restart_after=args.fleet_restart_after,
+                timeline_path=args.fleet_timeline or None,
+                chaos=FleetChaosConfig(kills=kills) if kills else None,
+            ), restart_factory=restart_factory)
+            outs, stats = fleet.run(reqs, on_token=on_token,
+                                    on_event=on_event)
+            for i, p in enumerate(demo):
+                s = stats[i]
+                print(f"[serve] req{i}: {p} -> {outs[i][len(p):]} "
+                      f"({s['status']}/{s['reason']} "
+                      f"engine={s['engine']} "
+                      f"migrations={s['migrations']} "
+                      f"retries={s['retries']})")
+            es = fleet.last_stats
+            print(f"[serve] fleet: engines={es['num_engines']} "
+                  f"ticks={es['ticks']} "
+                  f"status_counts={es['status_counts']} "
+                  f"migrations={es['migrations']} "
+                  f"retries={es['retries']} kills={es['kills']} "
+                  f"restarts={es['restarts']} hedges={es['hedges']}"
+                  + (f" timeline={es['timeline_path']}"
+                     if es["timeline_path"] else ""))
+            return
         outs, stats = eng.serve(reqs, on_token=on_token,
                                 on_event=on_event)
         for i, p in enumerate(demo):

@@ -75,6 +75,22 @@ prefix map     donor's still-being-written full blocks immediately
                without burning chunk lanes; a dead donor
                preempts-and-requeues the follower. Hits surface in
                ``prefix_hit_frac`` / ``inflight_promotions``
+sessions       ``ServeEngine.open_session`` returns a tick-steppable
+               :class:`ChunkedSession` (solo ``serve()`` = open +
+               submit + ``while tick()`` + ``close()``); sessions
+               expose per-tick routing signals, mid-flight
+               submit/cancel/queue-extraction, and a fleet mode whose
+               clock advances exactly one tick per call (fleet.py)
+fleet          :class:`Fleet` (fleet.py) drives N engine replicas as
+               tick-interleaved sessions on one global clock behind a
+               health-checked weighted least-loaded router
+               (router.py): per-engine ``live`` / ``degraded`` /
+               ``draining`` / ``dead`` from heartbeat age + engine
+               signals; shed/failed retried with capped backoff;
+               optional hedged re-dispatch for stragglers; failover
+               migrates a dead engine's work to survivors with saved
+               progress; per-tick JSONL signal timeline
+               (router.TimelineWriter documents the schema)
 =============  =====================================================
 
 Request lifecycle::
@@ -128,37 +144,88 @@ watchdog    request footprint >       fail the request with a  ``failed``
             ``watchdog_ticks``        zero-progress ticks
             .                         otherwise — instead of
             .                         spinning forever
+engine      chaos kill, or            fleet failover: migrate  (not
+death       heartbeat age >=          queued + active work to  terminal;
+            ``hb_dead`` fleet ticks   survivors with saved     counted in
+            (FleetChaosConfig         progress (resume         per-request
+            kills / kill_prob)        records re-prefill       ``migra-
+            .                         prompt + generated and   tions``)
+            .                         continue token-
+            .                         identically); no audits
+            .                         or leak checks on dead
+            .                         memory
+heartbeat   heartbeats suppressed     same failover — a false  (not
+loss        ``hb_loss_ticks`` while   positive costs a         terminal)
+            the engine still runs     migration, never a
+            (FleetChaosConfig         duplicate token: a dead-
+            hb_loss_prob)             declared engine is
+            .                         never ticked again
+hedge race  no new token for          duplicate copy on a      ``cancel-
+            ``hedge_after`` ticks     second replica; same     led``
+            (slow engine,             (rid, generated)         (engine-
+            FleetChaosConfig          sampling key makes both  local
+            slow_prob)                streams identical;       only)
+            .                         first completion wins,
+            .                         losers cancelled,
+            .                         blocks freed
+drain       operator                  no NEW admissions;       (not
+            ``fleet.drain(eid)``      queued work migrates     terminal)
+            .                         immediately, in-flight
+            .                         finishes, then the
+            .                         replica retires through
+            .                         the full close() checks
+            .                         (block-leak audit)
 ==========  ========================  =======================  ==========
 
 Every submitted request ends in exactly ONE terminal status —
 ``completed`` / ``shed`` / ``timeout`` / ``failed`` (in
 ``stats[rid]["status"]``; preemptions are counted per request, not
 terminal) — and ``BlockPool.check_invariants`` audits refcounts vs
-block tables at every tick boundary under chaos/test.
+block tables at every tick boundary under chaos/test. A fleet
+preserves the contract fleet-WIDE: engine-local ``shed`` / ``failed``
+are retried elsewhere (terminal only once the retry budget is spent),
+``cancelled`` marks a raced-out duplicate copy and never surfaces, and
+``Fleet.run`` asserts exactly one fleet-terminal record per request
+(``timeout`` is a user contract — absolute deadlines ride through
+migration un-reset and are never retried).
 
 ``repro.training.serve`` re-exports :class:`ServeConfig` /
 :class:`ServeEngine` for back-compat.
 """
-from repro.serve.engine import ChaosConfig, ServeConfig, ServeEngine
+from repro.serve.engine import (
+    ChaosConfig,
+    ChunkedSession,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.serve.fleet import Fleet, FleetChaosConfig, FleetConfig
 from repro.serve.paged_cache import (
     BlockPool,
     PrefixMatch,
     blocks_needed,
     bucket_len,
 )
+from repro.serve.router import Router, RouterConfig, TimelineWriter
 from repro.serve.scheduler import Request, Scheduler, Slot
 from repro.serve.speculative import SpecRunner, sample_token, verify_accept
 
 __all__ = [
     "BlockPool",
     "ChaosConfig",
+    "ChunkedSession",
+    "Fleet",
+    "FleetChaosConfig",
+    "FleetConfig",
     "PrefixMatch",
     "Request",
+    "Router",
+    "RouterConfig",
     "Scheduler",
     "ServeConfig",
     "ServeEngine",
     "Slot",
     "SpecRunner",
+    "TimelineWriter",
     "blocks_needed",
     "bucket_len",
     "sample_token",

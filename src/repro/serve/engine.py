@@ -524,469 +524,35 @@ class ServeEngine:
 
     # -- chunked mixed-step loop (the paged default) --------------------
 
+    def open_session(self, *, on_token=None, on_event=None, rng=None,
+                     fleet_mode: bool = False) -> "ChunkedSession":
+        """Open a tick-steppable chunked serve session (the fleet hook).
+
+        The solo :meth:`serve` path is ``open_session`` + submit all +
+        ``while sess.tick(): pass`` + ``close()``. A
+        :class:`repro.serve.fleet.Fleet` instead drives one session per
+        replica in lockstep (``fleet_mode=True``: the clock advances
+        exactly one tick per call, never fast-forwards, and an empty
+        queue keeps the session open for later routing), migrating
+        requests between sessions with :meth:`ChunkedSession.submit`'s
+        ``resume`` records.
+        """
+        if not (self.sc.paged and self.sc.admission == "chunked"):
+            raise ValueError(
+                "sessions need ServeConfig(paged=True, "
+                "admission='chunked')"
+            )
+        return ChunkedSession(self, on_token=on_token, on_event=on_event,
+                              rng=rng, fleet_mode=fleet_mode)
+
     def _serve_chunked(self, requests, *, on_token, on_event, rng):
-        sc = self.sc
-        bs = sc.block_size
-        B, NC, C = sc.max_batch, sc.chunks_per_step, sc.chunk_size
-        pool, sched, seed0, cache, nb, nblk = self._session(requests, rng)
-        outs, emit = self._emitter(requests, on_token)
-        req_map = {r.rid: r for r in requests}
-
-        slot_tables = np.zeros((B, nb), np.int32)  # real per-slot tables
-        lengths = np.zeros((B,), np.int32)  # tokens in cache per slot
-        cur = np.zeros((B, 1), np.int32)
-        dec_tables = np.zeros((B, nb), np.int32)  # decode-lane view
-        dec_lengths = np.zeros((B,), np.int32)
-        ctoks = np.zeros((NC, C), np.int32)
-        ctab = np.zeros((NC, nb), np.int32)
-        cstart = np.zeros((NC,), np.int32)
-        clen = np.zeros((NC,), np.int32)
-
-        # -- speculative decoding: draft runner + verify lanes ----------
-        spec = self._spec
-        runner = None
-        K1 = sc.spec_k + 1
-        if spec:
-            from repro.serve.speculative import SpecRunner
-
-            dcache = zoo.init_paged_serve_cache(
-                self._draft_cfg, nblk, bs, dtype=self._cache_dtype
-            )
-            runner = SpecRunner(
-                draft_step=self._draft_step,
-                draft_prefill=self._draft_prefill,
-                params=self._draft_params, cache=dcache,
-                spec_k=sc.spec_k, temperature=sc.temperature,
-                seed0=seed0, max_batch=B, num_chunks=NC, chunk_size=C,
-                nb=nb,
-            )
-            vtoks = np.zeros((B, K1), np.int32)
-            vtab = np.zeros((B, nb), np.int32)
-            vstart = np.zeros((B,), np.int32)
-            vlen = np.zeros((B,), np.int32)
-
-        chaos = sc.chaos
-        audit = sc.audit_invariants or chaos is not None
-        stats = {
-            "mode": "chunked",
-            "mixed_steps": 0,
-            "compile_events": [],
-            "decode_stall_ticks": 0,  # structurally 0: decode rows ride
-            "prefix_hit_tokens": 0,   # every mixed step
-            "prompt_tokens": 0,
-            "chunk_rows_used": 0,
-            "tick_wall": {},
-            # -- robustness observability --------------------------------
-            "events": [],  # (tick, rid, event, detail)
-            "preemptions": 0,
-            "watchdog_failures": 0,
-            "status_counts": {},  # terminal status -> count (at drain)
-            "peak_occupancy": 0.0,
-            "stall_ticks_max": 0,  # longest block-starved head streak
-            "audits": 0,
-            # -- speculative decoding ------------------------------------
-            "spec_drafted": 0,   # draft tokens proposed to the verifier
-            "spec_accepted": 0,  # draft tokens accepted by the verifier
-            "inflight_promotions": 0,  # pending shared blocks promoted
-        }
-        if chaos is not None:
-            stats["chaos"] = {"evictions": 0, "holds": 0,
-                              "held_blocks": 0, "bursts": 0,
-                              "burst_reqs": 0, "storms": 0}
-        self.last_stats = stats
-        compiled = 0
-
-        def clear_slot(i):
-            slot_tables[i, :] = 0
-            lengths[i] = 0
-            cur[i, 0] = 0
-            if runner is not None:
-                runner.clear_slot(i)
-
-        maybe_finish = self._finisher(sched, clear_slot)
-        # Forced evictions (preempt / timeout) must clear the victim's
-        # host-side lanes exactly like a normal finish does.
-        sched.on_evict = lambda slot: clear_slot(slot.index)
-
-        def seq_of(rid):
-            # Full sequence so far (prompt + generated) — what a
-            # preempted victim must re-prefill, and what its computed
-            # blocks are registered under for copy-free recovery.
-            return outs[rid]
-
-        ev_cursor = 0
-
-        def dispatch_events():
-            """Drain scheduler lifecycle events into stats + streaming
-            callbacks; returns how many fired (the progress signal for
-            the watchdog — sheds/timeouts ARE progress)."""
-            nonlocal ev_cursor
-            new = sched.events[ev_cursor:]
-            ev_cursor = len(sched.events)
-            for tick, rid, ev, detail in new:
-                stats["events"].append((tick, rid, ev, detail))
-                if ev == "preempted-requeued":
-                    stats["preemptions"] += 1
-                elif ev == "failed":
-                    stats["watchdog_failures"] += 1
-                if on_event is not None:
-                    on_event(rid, ev, detail)
-                req = req_map.get(rid)
-                if req is not None and req.on_event is not None:
-                    req.on_event(rid, ev, detail)
-            return len(new)
-
-        crng = (np.random.default_rng(chaos.seed)
-                if chaos is not None else None)
-        holds: list[list] = []  # [release_tick, blocks]
-
-        def chaos_tick(step):
-            cs = stats["chaos"]
-            for h in holds[:]:
-                if step >= h[0]:
-                    pool.free(h[1])
-                    holds.remove(h)
-            if chaos.evict_prob and crng.random() < chaos.evict_prob:
-                victims = sched.active
-                if victims:
-                    v = victims[int(crng.integers(len(victims)))]
-                    sched.preempt_slot(v, step, seq_of)
-                    cs["evictions"] += 1
-            if chaos.hold_prob and crng.random() < chaos.hold_prob:
-                avail = pool.num_free
-                if avail > 0:
-                    k = int(crng.integers(
-                        1, min(chaos.hold_max_blocks, avail) + 1
-                    ))
-                    blks = pool.alloc(k)
-                    if blks is not None:
-                        holds.append([step + chaos.hold_ticks, blks])
-                        cs["holds"] += 1
-                        cs["held_blocks"] += k
-            if chaos.burst_prob and crng.random() < chaos.burst_prob:
-                cs["bursts"] += 1
-                for _ in range(chaos.burst_size):
-                    rid = chaos.rid_base + cs["burst_reqs"]
-                    cs["burst_reqs"] += 1
-                    prompt = [int(t) for t in
-                              crng.integers(1, 97, size=chaos.burst_plen)]
-                    breq = Request(
-                        rid=rid, prompt=prompt,
-                        max_new=chaos.burst_max_new, arrival=step,
-                        priority=chaos.burst_priority,
-                    )
-                    outs[rid] = list(prompt)
-                    req_map[rid] = breq
-                    sched.submit(breq)
-            if chaos.storm_prob and crng.random() < chaos.storm_prob:
-                if sched.storm_deadlines(step, chaos.storm_ttft):
-                    cs["storms"] += 1
-
-        def tick_audit():
-            if audit:
-                pool.check_invariants(
-                    [s.blocks for s in sched.active]
-                    + [s.draft_blocks for s in sched.active
-                       if s.draft_blocks]
-                    + [h[1] for h in holds]
-                )
-                stats["audits"] += 1
-
-        step = 0
-        stuck = 0
-        while sched.has_work:
-            stats["tick_wall"].setdefault(step, time.perf_counter())
-            if crng is not None:
-                chaos_tick(step)
-            # -- robustness sweeps: deadlines, then backpressure — pure
-            # host bookkeeping, once per tick, no device syncs.
-            occ = (pool.capacity - pool.num_free) / pool.capacity
-            stats["peak_occupancy"] = max(stats["peak_occupancy"], occ)
-            sched.expire(step)
-            sched.enforce(step, occ)
-            # -- admission: slots + blocks, shared prefix mapped
-            # copy-free; CoW partial tails copied device-side. May
-            # preempt-and-requeue lower-priority actives (preempt=True).
-            admitted = sched.admit(step, seq_of=seq_of)
-            for slot in admitted:
-                i = slot.index
-                slot_tables[i, :] = 0
-                slot_tables[i, :len(slot.blocks)] = slot.blocks
-                if slot.cow is not None:
-                    src, dst, ntok = slot.cow
-                    cache = self._copy_block(
-                        cache, jnp.asarray(src, jnp.int32),
-                        jnp.asarray(dst, jnp.int32),
-                    )
-                    slot.length += ntok
-                    slot.cow = None
-                lengths[i] = slot.length
-                stats["prefix_hit_tokens"] += slot.prefix_tokens
-                stats["prompt_tokens"] += len(slot.eff_prompt)
-                if runner is not None:
-                    runner.set_slot(slot)
-            # -- in-flight prefix promotion: a follower's shared-but-
-            # pending blocks become readable only once the donor has
-            # computed past their end (promote in contiguous order); a
-            # dead or recycled donor invalidates the follower's mapped
-            # suffix -> preempt-and-requeue (copy-free recovery
-            # re-prefills from registered blocks).
-            for slot in list(sched.active):
-                while slot.pending_shared:
-                    end, donor, dseq = slot.pending_shared[0]
-                    if donor.request is None or donor.admit_seq != dseq:
-                        sched.preempt_slot(slot, step, seq_of)
-                        break
-                    if donor.length < end or slot.length + bs != end:
-                        break
-                    slot.pending_shared.pop(0)
-                    slot.length = end
-                    lengths[slot.index] = end
-                    slot.prefix_tokens += bs
-                    stats["prefix_hit_tokens"] += bs
-                    stats["inflight_promotions"] += 1
-            stats["stall_ticks_max"] = max(
-                stats["stall_ticks_max"], sched.stall_ticks
-            )
-            progress = dispatch_events() > 0
-
-            # -- chunk-lane assignment: strict FCFS over prefilling
-            # slots; one slot may take several lanes in one tick (its
-            # later chunks attend the earlier ones' in-step writes).
-            # eff_prompt (prompt + recovered generated tokens after a
-            # preemption) is what needs to be in the cache.
-            chunks = []  # (slot, start, ntok)
-            planned = {}
-            for slot in sched.prefilling():
-                if slot.pending_shared:
-                    # waiting on a donor's in-flight writes — burning
-                    # lanes here would recompute what the donor is about
-                    # to hand over for free.
-                    continue
-                plen = len(slot.eff_prompt)
-                pos = planned.get(slot.index, slot.length)
-                while len(chunks) < NC and pos < plen:
-                    n = min(C, plen - pos)
-                    chunks.append((slot, pos, n))
-                    pos += n
-                planned[slot.index] = pos
-                if len(chunks) >= NC:
-                    break
-
-            decoding = [s for s in sched.active if s.decoding]
-            if not decoding and not chunks:
-                pend = [s for s in sched.active if s.pending_shared]
-                if pend:
-                    # Unreachable in normal operation (a pending slot
-                    # implies a live prefilling donor, which implies
-                    # chunk work), but a wedged donor chain must not
-                    # spin the watchdog — requeue the followers.
-                    for s in pend:
-                        sched.preempt_slot(s, step, seq_of)
-                    dispatch_events()
-                    tick_audit()
-                    step += 1
-                    continue
-                nxt = sched.next_arrival()
-                if nxt is None:
-                    break
-                # -- stuck-tick watchdog: a visible head that nothing
-                # will ever unblock (chaos holds, block starvation with
-                # no preemptible victim) must fail with a diagnostic,
-                # not spin the clock forever. Sheds/timeouts/admissions
-                # this tick count as progress.
-                if progress or nxt > step:
-                    stuck = 0
-                else:
-                    stuck += 1
-                    if stuck >= max(1, sc.watchdog_ticks):
-                        free_slots = sum(
-                            1 for s in sched.slots if s.request is None
-                        )
-                        diag = (
-                            f"no progress for {stuck} ticks: "
-                            f"free_blocks={pool.num_free}/"
-                            f"{pool.capacity}, free_slots={free_slots}, "
-                            f"queued={len(sched.queue)}, "
-                            f"preempt={sc.preempt}"
-                        )
-                        if not sched.fail_stuck(step, diag):
-                            raise RuntimeError(
-                                f"serve watchdog wedged: {diag}"
-                            )
-                        dispatch_events()
-                        stuck = 0
-                tick_audit()
-                step = max(step + 1, nxt)  # idle: fast-forward the clock
-                continue
-            stuck = 0
-
-            # -- build the fixed-shape lanes. Non-decoding slots are
-            # masked out of the decode lane (zero table row, length 0 ->
-            # trash-block write, no routing claims).
-            ctoks[:] = 0
-            ctab[:] = 0
-            cstart[:] = 0
-            clen[:] = 0
-            for ci, (slot, start, n) in enumerate(chunks):
-                ctoks[ci, :n] = slot.eff_prompt[start:start + n]
-                ctab[ci] = slot_tables[slot.index]
-                cstart[ci] = start
-                clen[ci] = n
-
-            if spec:
-                # draft first: catch behind draft caches up, then run
-                # the lockstep k-token draft loop; decode slots become
-                # width-(1+k_eff) verify lanes on the target.
-                runner.catch_up(sched.active, seq_of)
-                dmap = runner.draft(decoding, cur)
-                vtoks[:] = 0
-                vtab[:] = 0
-                vstart[:] = 0
-                vlen[:] = 0
-                for s in decoding:
-                    i = s.index
-                    drafted = dmap[i][0] if i in dmap else []
-                    vtoks[i, 0] = cur[i, 0]
-                    for dj, d in enumerate(drafted):
-                        vtoks[i, 1 + dj] = d
-                    vtab[i] = slot_tables[i]
-                    vstart[i] = lengths[i]
-                    vlen[i] = 1 + len(drafted)
-                cache, logits = self._verify_step(
-                    self.params, jnp.asarray(vtoks), jnp.asarray(ctoks),
-                    cache, jnp.asarray(vtab), jnp.asarray(vstart),
-                    jnp.asarray(vlen), jnp.asarray(ctab),
-                    jnp.asarray(cstart), jnp.asarray(clen),
-                )
-                chunk_off = B * K1
-            else:
-                dec_tables[:] = 0
-                dec_lengths[:] = 0
-                for s in decoding:
-                    dec_tables[s.index] = slot_tables[s.index]
-                    dec_lengths[s.index] = lengths[s.index]
-                cache, logits = self._mixed_step(
-                    self.params, jnp.asarray(cur), jnp.asarray(ctoks),
-                    cache, jnp.asarray(dec_tables),
-                    jnp.asarray(dec_lengths),
-                    jnp.asarray(ctab), jnp.asarray(cstart),
-                    jnp.asarray(clen),
-                )
-                chunk_off = B
-            step += 1
-            stats["mixed_steps"] += 1
-            stats["chunk_rows_used"] += int(clen.sum())
-            n_compiled = (self._verify_step if spec
-                          else self._mixed_step)._cache_size()
-            if n_compiled != compiled:
-                compiled = n_compiled
-                stats["compile_events"].append(step)
-            lg_host = np.asarray(logits)  # ONE host sync per mixed step
-
-            # -- chunk bookkeeping first: lengths advance, prefix blocks
-            # register, completed prompts sample their next token (the
-            # FIRST token for fresh admissions; for re-admitted
-            # preemption victims, the continuation at index generated).
-            for ci, (slot, start, n) in enumerate(chunks):
-                i, req = slot.index, slot.request
-                slot.length = start + n
-                lengths[i] = slot.length
-                slot.reg_blocks, slot.reg_parent = pool.register_prefix(
-                    slot.eff_prompt, slot.blocks, slot.length,
-                    start_block=slot.reg_blocks, parent=slot.reg_parent,
-                )
-                if slot.length == len(slot.eff_prompt):
-                    if not slot.first_done:
-                        slot.first_token_at = step
-                        slot.first_done = True
-                    tok = self._sample_one(lg_host[chunk_off + ci],
-                                           seed0, req.rid,
-                                           slot.generated)
-                    emit(req, slot, tok)
-                    if not maybe_finish(slot, tok, step):
-                        slot.decoding = True
-                        cur[i, 0] = tok
-
-            # -- decode bookkeeping
-            for slot in decoding:
-                if slot.request is None:
-                    continue  # evicted this tick (deadline / chaos)
-                i, req = slot.index, slot.request
-                if spec:
-                    # Exact rejection sampling over this slot's verify
-                    # rows: emit m accepted drafts + 1 correction/bonus.
-                    # Rollback is overwrite-and-mask — length simply
-                    # stops after the last emitted token; stale cache
-                    # positions past it are never attended.
-                    drafted, qrows = dmap.get(i, ([], []))
-                    p_rows = lg_host[i * K1:i * K1 + 1 + len(drafted)]
-                    emitted, acc = verify_accept(
-                        drafted, qrows, p_rows, sc.temperature,
-                        seed0, req.rid, slot.generated,
-                    )
-                    stats["spec_drafted"] += len(drafted)
-                    stats["spec_accepted"] += acc
-                    slot.drafted += len(drafted)
-                    slot.accepted += acc
-                    fin = False
-                    for tok in emitted:
-                        slot.length += 1  # verified token is in cache
-                        lengths[i] += 1
-                        emit(req, slot, tok)
-                        if maybe_finish(slot, tok, step):
-                            fin = True
-                            break
-                    if not fin:
-                        cur[i, 0] = emitted[-1]
-                        if i in dmap:
-                            # draft wrote positions length..length+k_eff
-                            # in lockstep; the accepted region is valid.
-                            slot.draft_length = slot.length
-                    continue
-                slot.length += 1  # cur token entered the cache
-                lengths[i] += 1
-                tok = self._sample_one(lg_host[i], seed0, req.rid,
-                                       slot.generated)
-                emit(req, slot, tok)
-                if not maybe_finish(slot, tok, step):
-                    cur[i, 0] = tok
-            tick_audit()
-
-        # -- drain: release chaos holds, flush events, audit, and check
-        # every submitted request reached exactly one terminal status.
-        for h in holds:
-            pool.free(h[1])
-        holds.clear()
-        dispatch_events()
-        if audit:
-            pool.check_invariants([])
-            stats["audits"] += 1
-        counts: dict = {}
-        for rec in sched.finished.values():
-            counts[rec["status"]] = counts.get(rec["status"], 0) + 1
-        stats["status_counts"] = counts
-        stats["compile_count"] = (
-            self._verify_step._cache_size() if spec
-            else self._mixed_step._cache_size()
-        )
-        if spec:
-            stats["spec"] = {
-                "k": sc.spec_k, "draft": sc.draft, **runner.stats,
-            }
-            stats["acceptance_rate"] = (
-                stats["spec_accepted"] / max(stats["spec_drafted"], 1)
-            )
-            stats["draft_compile_count"] = runner.compile_count()
-        stats["prefix_hit_frac"] = (
-            stats["prefix_hit_tokens"] / max(stats["prompt_tokens"], 1)
-        )
-        assert pool.num_free == pool.capacity, "leaked KV blocks"
-        missing = set(outs) - set(sched.finished)
-        assert not missing, (
-            f"requests without a terminal status: {sorted(missing)}"
-        )
-        return outs, sched.finished
+        sess = self.open_session(on_token=on_token, on_event=on_event,
+                                 rng=rng)
+        for r in requests:
+            sess.submit(r)
+        while sess.tick():
+            pass
+        return sess.close()
 
     # -- prefill-on-join loop (pre-chunking baseline) -------------------
 
@@ -1102,3 +668,643 @@ class ServeEngine:
         return sample_token(
             logits_row, self.sc.temperature, seed0, rid, n
         )
+
+
+class ChunkedSession:
+    """One open chunked-serve session on a :class:`ServeEngine`,
+    advanced one tick at a time.
+
+    This is the engine's fleet hook: everything the solo ``serve()``
+    loop did per iteration lives in :meth:`tick`, so an external driver
+    (repro.serve.fleet.Fleet) can interleave N engine replicas on one
+    global clock and move requests between them mid-flight:
+
+    * :meth:`submit` — admit a request mid-session; with ``resume``
+      (the preempt-and-requeue record from another engine) decoding
+      continues at token index ``generated``, token-identical because
+      sampling is keyed on ``(rid, generated)`` and every replica in a
+      fleet derives the same session seed from the same rng.
+    * :meth:`cancel` — terminate this engine's copy of a request
+      (hedge loser / post-migration duplicate) with engine-local
+      terminal status ``cancelled``, freeing its blocks.
+    * :meth:`extract_queue` — pull every unadmitted request (with any
+      saved progress) for migration to another replica.
+    * :meth:`signals` — the per-tick routing / autoscaling signals
+      (occupancy, queue depth, stall ticks, active/decoding counts).
+    * :meth:`skip_tick` — advance the clock without doing work (the
+      fleet's slow-engine chaos; deadlines keep ticking globally).
+
+    ``fleet_mode=True`` keeps the session open when the queue is empty
+    (the fleet may route more work later) and never fast-forwards the
+    clock, so every replica's ``step`` equals the fleet's global tick.
+    Solo mode preserves the original ``serve()`` semantics exactly,
+    including idle fast-forward to the next arrival.
+    """
+
+    def __init__(self, engine: ServeEngine, *, on_token=None,
+                 on_event=None, rng=None, fleet_mode: bool = False):
+        self.eng = engine
+        sc = engine.sc
+        self.sc = sc
+        self.fleet_mode = fleet_mode
+        self.on_token = on_token
+        self.on_event = on_event
+        self.bs = sc.block_size
+        self.B, self.NC, self.C = (
+            sc.max_batch, sc.chunks_per_step, sc.chunk_size
+        )
+        B, NC, C = self.B, self.NC, self.C
+        (self.pool, self.sched, self.seed0, self.cache, self.nb,
+         self.nblk) = engine._session([], rng)
+        self.outs: dict[int, list] = {}
+        self.req_map: dict[int, Request] = {}
+
+        nb = self.nb
+        self.slot_tables = np.zeros((B, nb), np.int32)  # per-slot tables
+        self.lengths = np.zeros((B,), np.int32)  # tokens in cache / slot
+        self.cur = np.zeros((B, 1), np.int32)
+        self.dec_tables = np.zeros((B, nb), np.int32)  # decode-lane view
+        self.dec_lengths = np.zeros((B,), np.int32)
+        self.ctoks = np.zeros((NC, C), np.int32)
+        self.ctab = np.zeros((NC, nb), np.int32)
+        self.cstart = np.zeros((NC,), np.int32)
+        self.clen = np.zeros((NC,), np.int32)
+
+        # -- speculative decoding: draft runner + verify lanes ----------
+        self.spec = engine._spec
+        self.runner = None
+        self.K1 = sc.spec_k + 1
+        if self.spec:
+            from repro.serve.speculative import SpecRunner
+
+            dcache = zoo.init_paged_serve_cache(
+                engine._draft_cfg, self.nblk, self.bs,
+                dtype=engine._cache_dtype,
+            )
+            self.runner = SpecRunner(
+                draft_step=engine._draft_step,
+                draft_prefill=engine._draft_prefill,
+                params=engine._draft_params, cache=dcache,
+                spec_k=sc.spec_k, temperature=sc.temperature,
+                seed0=self.seed0, max_batch=B, num_chunks=NC,
+                chunk_size=C, nb=nb,
+            )
+            self.vtoks = np.zeros((B, self.K1), np.int32)
+            self.vtab = np.zeros((B, nb), np.int32)
+            self.vstart = np.zeros((B,), np.int32)
+            self.vlen = np.zeros((B,), np.int32)
+
+        self.chaos = sc.chaos
+        self.audit = sc.audit_invariants or self.chaos is not None
+        self.stats: dict = {
+            "mode": "chunked",
+            "mixed_steps": 0,
+            "compile_events": [],
+            "decode_stall_ticks": 0,  # structurally 0: decode rows ride
+            "prefix_hit_tokens": 0,   # every mixed step
+            "prompt_tokens": 0,
+            "chunk_rows_used": 0,
+            "tick_wall": {},
+            # -- robustness observability --------------------------------
+            "events": [],  # (tick, rid, event, detail)
+            "preemptions": 0,
+            "watchdog_failures": 0,
+            "status_counts": {},  # terminal status -> count (at drain)
+            "peak_occupancy": 0.0,
+            "stall_ticks_max": 0,  # longest block-starved head streak
+            "audits": 0,
+            # -- speculative decoding ------------------------------------
+            "spec_drafted": 0,   # draft tokens proposed to the verifier
+            "spec_accepted": 0,  # draft tokens accepted by the verifier
+            "inflight_promotions": 0,  # pending shared blocks promoted
+        }
+        if self.chaos is not None:
+            self.stats["chaos"] = {"evictions": 0, "holds": 0,
+                                   "held_blocks": 0, "bursts": 0,
+                                   "burst_reqs": 0, "storms": 0}
+        engine.last_stats = self.stats
+        self._compiled = 0
+        self._maybe_finish = engine._finisher(self.sched,
+                                              self._clear_slot)
+        # Forced evictions (preempt / timeout / cancel) must clear the
+        # victim's host-side lanes exactly like a normal finish does.
+        self.sched.on_evict = lambda slot: self._clear_slot(slot.index)
+        self._ev_cursor = 0
+        self._crng = (np.random.default_rng(self.chaos.seed)
+                      if self.chaos is not None else None)
+        self.holds: list[list] = []  # [release_tick, blocks]
+        self.step = 0
+        self._stuck = 0
+        self._closed = False
+
+    # -- request plumbing ----------------------------------------------
+    def submit(self, req: Request, resume: Optional[dict] = None
+               ) -> None:
+        """Submit a request to this session. ``resume`` (a
+        preempt-and-requeue record with the full token sequence so far)
+        makes this a fleet re-admission: re-prefill covers prompt +
+        already-generated tokens and decoding continues token-identical
+        at index ``generated``. Deadlines stay anchored to the
+        request's ORIGINAL arrival tick in both cases."""
+        if resume is not None:
+            self.sched.resubmit(req, resume)
+            self.outs[req.rid] = list(resume["seq"])
+        else:
+            self.sched.submit(req)
+            self.outs[req.rid] = list(req.prompt)
+        self.req_map[req.rid] = req
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Cancel this session's copy of ``rid`` (queued or active):
+        blocks freed, engine-local terminal status ``cancelled``."""
+        return self.sched.cancel(rid, self.step, reason)
+
+    def forget(self, rid: int) -> None:
+        """Drop a TERMINAL rid's record so the fleet can resubmit the
+        same request here later (retry on the only surviving engine)."""
+        self.sched.forget(rid)
+        self.outs.pop(rid, None)
+        self.req_map.pop(rid, None)
+
+    def extract_queue(self):
+        """Migration: pull every queued (unadmitted) request — with any
+        saved preemption progress — out of this session, no terminal
+        records. The fleet re-routes them to surviving replicas."""
+        out = self.sched.extract_queue()
+        for req, _ in out:
+            self.outs.pop(req.rid, None)
+            self.req_map.pop(req.rid, None)
+        return out
+
+    @property
+    def active_requests(self) -> list:
+        return [s.request for s in self.sched.active
+                if s.request is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work
+
+    def signals(self) -> dict:
+        """Per-tick routing / health / autoscaling signals (the
+        ROADMAP's 'shed/occupancy signals wired out'): pure host reads,
+        exported into the fleet's JSONL timeline every tick."""
+        pool, sched = self.pool, self.sched
+        occ = (pool.capacity - pool.num_free) / pool.capacity
+        return {
+            "occupancy": occ,
+            "free_blocks": pool.num_free,
+            "queue_depth": len(sched.queue),
+            "active": len(sched.active),
+            "decoding": sum(1 for s in sched.active if s.decoding),
+            "stall_ticks": sched.stall_ticks,
+            "step": self.step,
+        }
+
+    def skip_tick(self) -> None:
+        """Advance the session clock WITHOUT doing any work (fleet
+        slow-engine degradation): deadlines keep ticking in global
+        time, the engine just gets nothing done this tick."""
+        self.step += 1
+
+    def flush_events(self) -> int:
+        """Deliver any undelivered lifecycle events NOW. A request can
+        reach a terminal status in a tick's bookkeeping AFTER that
+        tick's event dispatch ran — normally the next tick (or close())
+        delivers it, but a fleet killing this engine must flush first
+        or it would migrate already-finished work."""
+        return self._dispatch_events()
+
+    # -- internals ------------------------------------------------------
+    def _clear_slot(self, i: int) -> None:
+        self.slot_tables[i, :] = 0
+        self.lengths[i] = 0
+        self.cur[i, 0] = 0
+        if self.runner is not None:
+            self.runner.clear_slot(i)
+
+    def _seq_of(self, rid: int) -> list:
+        # Full sequence so far (prompt + generated) — what a preempted
+        # victim must re-prefill, and what its computed blocks are
+        # registered under for copy-free recovery.
+        return self.outs[rid]
+
+    def _emit(self, req, slot, tok: int) -> None:
+        self.outs[req.rid].append(tok)
+        slot.generated += 1
+        if self.on_token is not None:
+            self.on_token(req.rid, tok)
+        if req.on_token is not None:
+            req.on_token(req.rid, tok)
+
+    def _dispatch_events(self) -> int:
+        """Drain scheduler lifecycle events into stats + streaming
+        callbacks; returns how many fired (the progress signal for the
+        watchdog — sheds/timeouts ARE progress)."""
+        new = self.sched.events[self._ev_cursor:]
+        self._ev_cursor = len(self.sched.events)
+        for tick, rid, ev, detail in new:
+            self.stats["events"].append((tick, rid, ev, detail))
+            if ev == "preempted-requeued":
+                self.stats["preemptions"] += 1
+            elif ev == "failed":
+                self.stats["watchdog_failures"] += 1
+            if self.on_event is not None:
+                self.on_event(rid, ev, detail)
+            req = self.req_map.get(rid)
+            if req is not None and req.on_event is not None:
+                req.on_event(rid, ev, detail)
+        return len(new)
+
+    def _chaos_tick(self, step: int) -> None:
+        chaos, crng, pool, sched = (
+            self.chaos, self._crng, self.pool, self.sched
+        )
+        cs = self.stats["chaos"]
+        for h in self.holds[:]:
+            if step >= h[0]:
+                pool.free(h[1])
+                self.holds.remove(h)
+        if chaos.evict_prob and crng.random() < chaos.evict_prob:
+            victims = sched.active
+            if victims:
+                v = victims[int(crng.integers(len(victims)))]
+                sched.preempt_slot(v, step, self._seq_of)
+                cs["evictions"] += 1
+        if chaos.hold_prob and crng.random() < chaos.hold_prob:
+            avail = pool.num_free
+            if avail > 0:
+                k = int(crng.integers(
+                    1, min(chaos.hold_max_blocks, avail) + 1
+                ))
+                blks = pool.alloc(k)
+                if blks is not None:
+                    self.holds.append([step + chaos.hold_ticks, blks])
+                    cs["holds"] += 1
+                    cs["held_blocks"] += k
+        if chaos.burst_prob and crng.random() < chaos.burst_prob:
+            cs["bursts"] += 1
+            for _ in range(chaos.burst_size):
+                rid = chaos.rid_base + cs["burst_reqs"]
+                cs["burst_reqs"] += 1
+                prompt = [int(t) for t in
+                          crng.integers(1, 97, size=chaos.burst_plen)]
+                breq = Request(
+                    rid=rid, prompt=prompt,
+                    max_new=chaos.burst_max_new, arrival=step,
+                    priority=chaos.burst_priority,
+                )
+                self.outs[rid] = list(prompt)
+                self.req_map[rid] = breq
+                sched.submit(breq)
+        if chaos.storm_prob and crng.random() < chaos.storm_prob:
+            if sched.storm_deadlines(step, chaos.storm_ttft):
+                cs["storms"] += 1
+
+    def _tick_audit(self) -> None:
+        if self.audit:
+            sched = self.sched
+            self.pool.check_invariants(
+                [s.blocks for s in sched.active]
+                + [s.draft_blocks for s in sched.active
+                   if s.draft_blocks]
+                + [h[1] for h in self.holds]
+            )
+            self.stats["audits"] += 1
+
+    # -- the tick -------------------------------------------------------
+    def tick(self) -> bool:
+        """Run ONE serve tick (deadlines -> backpressure -> admission ->
+        chunk planning -> one mixed step -> bookkeeping -> audit), the
+        loop body of the original chunked serve loop. Returns whether
+        the session still has work afterwards — the solo loop is
+        ``while sess.tick(): pass``."""
+        eng, sc = self.eng, self.sc
+        sched, pool, stats = self.sched, self.pool, self.stats
+        bs, B, NC, C = self.bs, self.B, self.NC, self.C
+        if not sched.has_work:
+            # Terminal events from the LAST working tick's bookkeeping
+            # are still undelivered (the mid-tick dispatch ran before
+            # them) — flush here so a fleet session that idles, rather
+            # than closes, still reports its completions.
+            self._dispatch_events()
+            if self.fleet_mode:
+                self.step += 1  # idle fleet tick: the clock stays global
+            return False
+        step = self.step
+        stats["tick_wall"].setdefault(step, time.perf_counter())
+        if self._crng is not None:
+            self._chaos_tick(step)
+        # -- robustness sweeps: deadlines, then backpressure — pure
+        # host bookkeeping, once per tick, no device syncs.
+        occ = (pool.capacity - pool.num_free) / pool.capacity
+        stats["peak_occupancy"] = max(stats["peak_occupancy"], occ)
+        sched.expire(step)
+        sched.enforce(step, occ)
+        # -- admission: slots + blocks, shared prefix mapped copy-free;
+        # CoW partial tails copied device-side. May preempt-and-requeue
+        # lower-priority actives (preempt=True).
+        admitted = sched.admit(step, seq_of=self._seq_of)
+        for slot in admitted:
+            i = slot.index
+            self.slot_tables[i, :] = 0
+            self.slot_tables[i, :len(slot.blocks)] = slot.blocks
+            if slot.cow is not None:
+                src, dst, ntok = slot.cow
+                self.cache = eng._copy_block(
+                    self.cache, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                )
+                slot.length += ntok
+                slot.cow = None
+            self.lengths[i] = slot.length
+            stats["prefix_hit_tokens"] += slot.prefix_tokens
+            stats["prompt_tokens"] += len(slot.eff_prompt)
+            if self.runner is not None:
+                self.runner.set_slot(slot)
+        # -- in-flight prefix promotion: a follower's shared-but-pending
+        # blocks become readable only once the donor has computed past
+        # their end (promote in contiguous order); a dead or recycled
+        # donor invalidates the follower's mapped suffix ->
+        # preempt-and-requeue (copy-free recovery re-prefills from
+        # registered blocks).
+        for slot in list(sched.active):
+            while slot.pending_shared:
+                end, donor, dseq = slot.pending_shared[0]
+                if donor.request is None or donor.admit_seq != dseq:
+                    sched.preempt_slot(slot, step, self._seq_of)
+                    break
+                if donor.length < end or slot.length + bs != end:
+                    break
+                slot.pending_shared.pop(0)
+                slot.length = end
+                self.lengths[slot.index] = end
+                slot.prefix_tokens += bs
+                stats["prefix_hit_tokens"] += bs
+                stats["inflight_promotions"] += 1
+        stats["stall_ticks_max"] = max(
+            stats["stall_ticks_max"], sched.stall_ticks
+        )
+        progress = self._dispatch_events() > 0
+
+        # -- chunk-lane assignment: strict FCFS over prefilling slots;
+        # one slot may take several lanes in one tick (its later chunks
+        # attend the earlier ones' in-step writes). eff_prompt (prompt +
+        # recovered generated tokens after a preemption) is what needs
+        # to be in the cache.
+        chunks = []  # (slot, start, ntok)
+        planned = {}
+        for slot in sched.prefilling():
+            if slot.pending_shared:
+                # waiting on a donor's in-flight writes — burning lanes
+                # here would recompute what the donor is about to hand
+                # over for free.
+                continue
+            plen = len(slot.eff_prompt)
+            pos = planned.get(slot.index, slot.length)
+            while len(chunks) < NC and pos < plen:
+                n = min(C, plen - pos)
+                chunks.append((slot, pos, n))
+                pos += n
+            planned[slot.index] = pos
+            if len(chunks) >= NC:
+                break
+
+        decoding = [s for s in sched.active if s.decoding]
+        if not decoding and not chunks:
+            pend = [s for s in sched.active if s.pending_shared]
+            if pend:
+                # Unreachable in normal operation (a pending slot
+                # implies a live prefilling donor, which implies chunk
+                # work), but a wedged donor chain must not spin the
+                # watchdog — requeue the followers.
+                for s in pend:
+                    sched.preempt_slot(s, step, self._seq_of)
+                self._dispatch_events()
+                self._tick_audit()
+                self.step = step + 1
+                return True
+            nxt = sched.next_arrival()
+            if nxt is None:
+                # Solo: the session drains (close() runs the final
+                # checks). Fleet: stays open — more work may be routed
+                # here next tick — but the clock must still advance.
+                if self.fleet_mode:
+                    self.step = step + 1
+                return False
+            # -- stuck-tick watchdog: a visible head that nothing will
+            # ever unblock (chaos holds, block starvation with no
+            # preemptible victim) must fail with a diagnostic, not spin
+            # the clock forever. Sheds/timeouts/admissions this tick
+            # count as progress.
+            if progress or nxt > step:
+                self._stuck = 0
+            else:
+                self._stuck += 1
+                if self._stuck >= max(1, sc.watchdog_ticks):
+                    free_slots = sum(
+                        1 for s in sched.slots if s.request is None
+                    )
+                    diag = (
+                        f"no progress for {self._stuck} ticks: "
+                        f"free_blocks={pool.num_free}/"
+                        f"{pool.capacity}, free_slots={free_slots}, "
+                        f"queued={len(sched.queue)}, "
+                        f"preempt={sc.preempt}"
+                    )
+                    if not sched.fail_stuck(step, diag):
+                        raise RuntimeError(
+                            f"serve watchdog wedged: {diag}"
+                        )
+                    self._dispatch_events()
+                    self._stuck = 0
+            self._tick_audit()
+            # idle: fast-forward the clock (solo only — fleet clocks
+            # are global and advance one tick per call).
+            self.step = (step + 1 if self.fleet_mode
+                         else max(step + 1, nxt))
+            return True
+        self._stuck = 0
+
+        # -- build the fixed-shape lanes. Non-decoding slots are masked
+        # out of the decode lane (zero table row, length 0 ->
+        # trash-block write, no routing claims).
+        ctoks, ctab = self.ctoks, self.ctab
+        cstart, clen = self.cstart, self.clen
+        ctoks[:] = 0
+        ctab[:] = 0
+        cstart[:] = 0
+        clen[:] = 0
+        for ci, (slot, start, n) in enumerate(chunks):
+            ctoks[ci, :n] = slot.eff_prompt[start:start + n]
+            ctab[ci] = self.slot_tables[slot.index]
+            cstart[ci] = start
+            clen[ci] = n
+
+        if self.spec:
+            # draft first: catch behind draft caches up, then run the
+            # lockstep k-token draft loop; decode slots become
+            # width-(1+k_eff) verify lanes on the target.
+            runner = self.runner
+            runner.catch_up(sched.active, self._seq_of)
+            dmap = runner.draft(decoding, self.cur)
+            vtoks, vtab = self.vtoks, self.vtab
+            vstart, vlen = self.vstart, self.vlen
+            vtoks[:] = 0
+            vtab[:] = 0
+            vstart[:] = 0
+            vlen[:] = 0
+            for s in decoding:
+                i = s.index
+                drafted = dmap[i][0] if i in dmap else []
+                vtoks[i, 0] = self.cur[i, 0]
+                for dj, d in enumerate(drafted):
+                    vtoks[i, 1 + dj] = d
+                vtab[i] = self.slot_tables[i]
+                vstart[i] = self.lengths[i]
+                vlen[i] = 1 + len(drafted)
+            self.cache, logits = eng._verify_step(
+                eng.params, jnp.asarray(vtoks), jnp.asarray(ctoks),
+                self.cache, jnp.asarray(vtab), jnp.asarray(vstart),
+                jnp.asarray(vlen), jnp.asarray(ctab),
+                jnp.asarray(cstart), jnp.asarray(clen),
+            )
+            chunk_off = B * self.K1
+        else:
+            dec_tables, dec_lengths = self.dec_tables, self.dec_lengths
+            dec_tables[:] = 0
+            dec_lengths[:] = 0
+            for s in decoding:
+                dec_tables[s.index] = self.slot_tables[s.index]
+                dec_lengths[s.index] = self.lengths[s.index]
+            self.cache, logits = eng._mixed_step(
+                eng.params, jnp.asarray(self.cur), jnp.asarray(ctoks),
+                self.cache, jnp.asarray(dec_tables),
+                jnp.asarray(dec_lengths),
+                jnp.asarray(ctab), jnp.asarray(cstart),
+                jnp.asarray(clen),
+            )
+            chunk_off = B
+        step += 1
+        self.step = step
+        stats["mixed_steps"] += 1
+        stats["chunk_rows_used"] += int(clen.sum())
+        n_compiled = (eng._verify_step if self.spec
+                      else eng._mixed_step)._cache_size()
+        if n_compiled != self._compiled:
+            self._compiled = n_compiled
+            stats["compile_events"].append(step)
+        lg_host = np.asarray(logits)  # ONE host sync per mixed step
+
+        # -- chunk bookkeeping first: lengths advance, prefix blocks
+        # register, completed prompts sample their next token (the
+        # FIRST token for fresh admissions; for re-admitted preemption
+        # victims, the continuation at index generated).
+        for ci, (slot, start, n) in enumerate(chunks):
+            i, req = slot.index, slot.request
+            slot.length = start + n
+            self.lengths[i] = slot.length
+            slot.reg_blocks, slot.reg_parent = pool.register_prefix(
+                slot.eff_prompt, slot.blocks, slot.length,
+                start_block=slot.reg_blocks, parent=slot.reg_parent,
+            )
+            if slot.length == len(slot.eff_prompt):
+                if not slot.first_done:
+                    slot.first_token_at = step
+                    slot.first_done = True
+                tok = eng._sample_one(lg_host[chunk_off + ci],
+                                      self.seed0, req.rid,
+                                      slot.generated)
+                self._emit(req, slot, tok)
+                if not self._maybe_finish(slot, tok, step):
+                    slot.decoding = True
+                    self.cur[i, 0] = tok
+
+        # -- decode bookkeeping
+        for slot in decoding:
+            if slot.request is None:
+                continue  # evicted this tick (deadline / chaos)
+            i, req = slot.index, slot.request
+            if self.spec:
+                # Exact rejection sampling over this slot's verify
+                # rows: emit m accepted drafts + 1 correction/bonus.
+                # Rollback is overwrite-and-mask — length simply stops
+                # after the last emitted token; stale cache positions
+                # past it are never attended.
+                drafted, qrows = dmap.get(i, ([], []))
+                K1 = self.K1
+                p_rows = lg_host[i * K1:i * K1 + 1 + len(drafted)]
+                emitted, acc = verify_accept(
+                    drafted, qrows, p_rows, sc.temperature,
+                    self.seed0, req.rid, slot.generated,
+                )
+                stats["spec_drafted"] += len(drafted)
+                stats["spec_accepted"] += acc
+                slot.drafted += len(drafted)
+                slot.accepted += acc
+                fin = False
+                for tok in emitted:
+                    slot.length += 1  # verified token is in cache
+                    self.lengths[i] += 1
+                    self._emit(req, slot, tok)
+                    if self._maybe_finish(slot, tok, step):
+                        fin = True
+                        break
+                if not fin:
+                    self.cur[i, 0] = emitted[-1]
+                    if i in dmap:
+                        # draft wrote positions length..length+k_eff in
+                        # lockstep; the accepted region is valid.
+                        slot.draft_length = slot.length
+                continue
+            slot.length += 1  # cur token entered the cache
+            self.lengths[i] += 1
+            tok = eng._sample_one(lg_host[i], self.seed0, req.rid,
+                                  slot.generated)
+            self._emit(req, slot, tok)
+            if not self._maybe_finish(slot, tok, step):
+                self.cur[i, 0] = tok
+        self._tick_audit()
+        return True
+
+    def close(self):
+        """Drain: release chaos holds, flush events, audit, and check
+        every submitted request reached exactly one terminal status and
+        zero KV blocks leaked. Returns ``(outputs, finished)`` exactly
+        like ``serve()``."""
+        assert not self._closed, "session already closed"
+        self._closed = True
+        pool, sched, stats = self.pool, self.sched, self.stats
+        for h in self.holds:
+            pool.free(h[1])
+        self.holds.clear()
+        self._dispatch_events()
+        if self.audit:
+            pool.check_invariants([])
+            stats["audits"] += 1
+        counts: dict = {}
+        for rec in sched.finished.values():
+            counts[rec["status"]] = counts.get(rec["status"], 0) + 1
+        stats["status_counts"] = counts
+        stats["compile_count"] = (
+            self.eng._verify_step._cache_size() if self.spec
+            else self.eng._mixed_step._cache_size()
+        )
+        if self.spec:
+            stats["spec"] = {
+                "k": self.sc.spec_k, "draft": self.sc.draft,
+                **self.runner.stats,
+            }
+            stats["acceptance_rate"] = (
+                stats["spec_accepted"] / max(stats["spec_drafted"], 1)
+            )
+            stats["draft_compile_count"] = self.runner.compile_count()
+        stats["prefix_hit_frac"] = (
+            stats["prefix_hit_tokens"] / max(stats["prompt_tokens"], 1)
+        )
+        assert pool.num_free == pool.capacity, "leaked KV blocks"
+        missing = set(self.outs) - set(sched.finished)
+        assert not missing, (
+            f"requests without a terminal status: {sorted(missing)}"
+        )
+        return self.outs, sched.finished

@@ -134,3 +134,110 @@ def test_manager_structure_mismatch_still_raises(tmp_path):
     m.save(3, t)
     with pytest.raises(ValueError):
         m.restore_latest({"a": t["a"]})
+
+
+class _Flaky:
+    """Injectable fault hook: fail the first ``n`` attempts of ``ops``."""
+
+    def __init__(self, n, ops=("save", "restore", "restore_latest")):
+        self.n = n
+        self.ops = ops
+        self.calls = []
+
+    def __call__(self, op, attempt):
+        self.calls.append((op, attempt))
+        if op in self.ops and attempt < self.n:
+            raise OSError(f"transient {op} failure #{attempt}")
+
+
+def test_manager_retries_transient_save_and_restore(tmp_path):
+    """Transient store IO failures are retried with capped exponential
+    backoff (injected via fault_hook) and succeed within budget."""
+    delays = []
+    hook = _Flaky(2)
+    m = CheckpointManager(
+        str(tmp_path), io_retries=2, io_backoff=0.05, io_backoff_cap=1.0,
+        fault_hook=hook, sleep=delays.append,
+    )
+    t = tree()
+    m.save(1, t)  # attempts 0,1 fail, 2 succeeds
+    assert [c for c in hook.calls if c[0] == "save"] == [
+        ("save", 0), ("save", 1), ("save", 2)
+    ]
+    assert delays == [0.05, 0.1]  # base * 2**attempt
+    hook.n = 1
+    out = m.restore(1, t)
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(t["a"])
+    )
+    out, step, _ = m.restore_latest(t)
+    assert step == 1
+
+
+def test_manager_retry_budget_exhausted_raises_then_falls_back(tmp_path):
+    """A PERSISTENT failure escapes after the retry budget — and
+    restore_latest then still falls back to the last-known-good step."""
+    delays = []
+    m = CheckpointManager(str(tmp_path), io_retries=2,
+                          sleep=delays.append)
+    t = tree()
+    m.save(3, t)
+    m.save(7, t)
+
+    always_down = _Flaky(10 ** 9, ops=("save",))
+    m.fault_hook = always_down
+    with pytest.raises(OSError):
+        m.save(9, t)
+    assert len(delays) == 2  # budget spent before the raise
+
+    # restore path: persistent failures for step 7 only -> after the
+    # retries are exhausted the scan falls back to step 3.
+    seen = []
+
+    def step7_down(op, attempt):
+        seen.append((op, attempt))
+        if op == "restore_latest" and not (tmp_path / "ok").exists():
+            raise OSError("mount flapping")
+
+    m.fault_hook = step7_down
+    orig = m._with_retries
+
+    def flaky_once(op, fn):
+        # fail step 7's attempts; before step 3's round, heal the mount
+        try:
+            return orig(op, fn)
+        except OSError:
+            (tmp_path / "ok").touch()
+            raise
+
+    m._with_retries = flaky_once
+    out, step, _ = m.restore_latest(t)
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(t["a"])
+    )
+
+
+def test_manager_retry_backoff_is_capped(tmp_path):
+    delays = []
+    m = CheckpointManager(
+        str(tmp_path), io_retries=5, io_backoff=0.1, io_backoff_cap=0.3,
+        fault_hook=_Flaky(5), sleep=delays.append,
+    )
+    m.save(1, tree())
+    assert delays == [0.1, 0.2, 0.3, 0.3, 0.3]
+
+
+def test_manager_never_retries_structure_mismatch(tmp_path):
+    """ValueError (caller bug) is deterministic — retrying it would
+    just burn the backoff budget; it must raise on attempt 0."""
+    hook = _Flaky(0)
+    m = CheckpointManager(str(tmp_path), io_retries=3, fault_hook=hook,
+                          sleep=lambda _d: None)
+    t = tree()
+    m.save(1, t)
+    with pytest.raises(ValueError):
+        m.restore(1, {"a": t["a"]})
+    assert [c for c in hook.calls if c[0] == "restore"] == [
+        ("restore", 0)
+    ]

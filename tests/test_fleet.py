@@ -1,0 +1,375 @@
+"""Serving fleet: health-checked routing, failover + request
+migration, hedged retries, graceful drain, restart, and fleet-level
+chaos sweeps.
+
+The load-bearing contract: replicas share one sampling stream keyed on
+(rid, generated), so a migrated / retried / hedged continuation is
+token-identical to an unchaosed single-engine run, every request
+reaches exactly ONE fleet-terminal status, and every surviving pool
+passes its per-tick invariant audits and the close() block-leak check.
+
+Set REPRO_FLEET=1 to widen the chaos sweep (more seeds) — the verify
+script's fleet lane does.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import model_zoo as zoo
+from repro.models import param as pm
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve.fleet import Fleet, FleetChaosConfig, FleetConfig
+from repro.serve.router import Router, RouterConfig
+
+BS = 8
+
+
+def _dropless(cfg):
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)
+        )
+    )
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = _dropless(get_reduced("granite-moe-1b-a400m"))
+    p = zoo.init_params(jax.random.PRNGKey(0), cfg)
+    vals, _ = pm.split(p)
+    return cfg, vals
+
+
+def _engine(granite, **kw):
+    cfg, vals = granite
+    base = dict(max_batch=3, max_len=64, paged=True, block_size=BS,
+                chunk_size=8, chunks_per_step=2, audit_invariants=True)
+    base.update(kw)
+    return ServeEngine(vals, cfg, ServeConfig(**base))
+
+
+def _req(rid, plen=8, arrival=0, max_new=8, **kw):
+    prompt = [(37 * rid + 11 * i) % 97 + 1 for i in range(plen)]
+    return Request(rid=rid, prompt=prompt, max_new=max_new,
+                   arrival=arrival, **kw)
+
+
+def _reqs(n, **kw):
+    return [_req(r, arrival=kw.pop("stagger", 1) * r // 2, **dict(kw))
+            for r in range(n)]
+
+
+@pytest.fixture(scope="module")
+def solo_baseline(granite):
+    """Unchaosed single-engine greedy run — the parity oracle."""
+    eng = _engine(granite)
+    outs, fin = eng.serve([_req(r, arrival=r // 2) for r in range(8)])
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# router policy units (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_router_health_derivation():
+    r = Router(RouterConfig(hb_degraded=3, hb_dead=10,
+                            degraded_occupancy=0.9, degraded_queue=4,
+                            degraded_stall_ticks=2))
+    ok = dict(occupancy=0.1, queue_depth=0, active=1, stall_ticks=0)
+    assert r.derive_state(0, ok) == "live"
+    assert r.derive_state(3, ok) == "degraded"  # stale heartbeat
+    assert r.derive_state(10, ok) == "dead"     # failover threshold
+    assert r.derive_state(0, {**ok, "occupancy": 0.95}) == "degraded"
+    assert r.derive_state(0, {**ok, "queue_depth": 4}) == "degraded"
+    assert r.derive_state(0, {**ok, "stall_ticks": 2}) == "degraded"
+
+
+def test_router_weighted_least_loaded_pick():
+    r = Router(RouterConfig(degraded_weight=4.0))
+    sig = lambda q, a, o: dict(queue_depth=q, active=a, occupancy=o)  # noqa: E731
+    # plain least-loaded, deterministic lowest-eid tie-break
+    assert r.pick([(0, "live", sig(2, 1, 0.0)),
+                   (1, "live", sig(0, 1, 0.0))]) == 1
+    assert r.pick([(0, "live", sig(1, 0, 0.0)),
+                   (1, "live", sig(1, 0, 0.0))]) == 0
+    # a degraded replica loses to a busier live one...
+    assert r.pick([(0, "degraded", sig(0, 1, 0.0)),
+                   (1, "live", sig(2, 1, 0.0))]) == 1
+    # ...but still wins when it is the only option
+    assert r.pick([(0, "degraded", sig(0, 1, 0.0))]) == 0
+    assert r.pick([]) is None
+
+
+def test_router_backoff_caps():
+    r = Router(RouterConfig(retry_backoff=1, retry_backoff_cap=16))
+    assert [r.backoff(a) for a in range(6)] == [1, 2, 4, 8, 16, 16]
+
+
+# ---------------------------------------------------------------------------
+# failover + migration
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_kill_mid_decode_token_parity(granite, solo_baseline):
+    """Seeded engine kill mid-decode: the corpse's queued + active
+    requests migrate to survivors with saved progress and complete
+    token-identical to the unchaosed single-engine run; every request
+    ends in exactly ONE fleet-terminal status; per-tick pool audits ran
+    on every surviving engine."""
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(
+        num_engines=3,
+        chaos=FleetChaosConfig(seed=1, kills=((3, 0),)),
+    ))
+    outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
+    # exactly one terminal status fleet-wide, all completed
+    assert sorted(fin) == list(range(8))
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    assert fl.last_stats["status_counts"] == {"completed": 8}
+    # the kill actually migrated work mid-flight
+    assert fl.last_stats["kills"] == 1
+    assert fl.last_stats["migrations"] >= 1
+    assert any(rec["migrations"] > 0 for rec in fin.values())
+    # token identity with the solo run, migrated requests included
+    for rid, toks in solo_baseline.items():
+        assert outs[rid] == toks, f"rid {rid} diverged after migration"
+    # audits ran on the survivors (and their close() leak checks passed
+    # inside run()); the corpse is dead memory — no audit claims on it
+    eng_stats = fl.last_stats["engines"]
+    assert eng_stats[0]["state"] == "dead"
+    for eid in (1, 2):
+        assert eng_stats[eid]["audits"] > 0
+
+
+def test_fleet_chaos_sweep_exactly_one_terminal(granite, solo_baseline):
+    """Combined fleet chaos (probabilistic kills + heartbeat loss +
+    slow engines) over seeds: every request reaches exactly one
+    fleet-terminal status, and every COMPLETED request is
+    token-identical to the unchaosed run."""
+    seeds = range(6) if os.environ.get("REPRO_FLEET") else range(2)
+    eng = _engine(granite)
+    for seed in seeds:
+        fl = Fleet(eng, FleetConfig(
+            num_engines=3,
+            router=RouterConfig(hb_dead=6),
+            chaos=FleetChaosConfig(
+                seed=seed, kill_prob=0.02, max_kills=1,
+                hb_loss_prob=0.02, hb_loss_ticks=8,
+                slow_prob=0.05, slow_ticks=3,
+            ),
+        ))
+        outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
+        assert sorted(fin) == list(range(8)), f"seed {seed}"
+        statuses = {rec["status"] for rec in fin.values()}
+        assert statuses <= {"completed", "timeout", "shed", "failed"}
+        for rid, rec in fin.items():
+            if rec["status"] == "completed":
+                assert outs[rid] == solo_baseline[rid], \
+                    f"seed {seed} rid {rid} diverged"
+        n = sum(fl.last_stats["status_counts"].values())
+        assert n == 8, f"seed {seed}: terminal statuses double-counted"
+
+
+def test_fleet_heartbeat_loss_false_positive_failover(granite,
+                                                      solo_baseline):
+    """Heartbeat loss on a HEALTHY engine: the fleet declares it dead
+    and migrates — a false positive that must cost a migration, never a
+    duplicate or diverging token (the corpse stops being ticked)."""
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2,
+        router=RouterConfig(hb_dead=4),
+        chaos=FleetChaosConfig(seed=7, hb_loss_prob=0.2,
+                               hb_loss_ticks=10, max_hb_losses=1),
+    ))
+    outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
+    assert fl.last_stats["hb_failovers"] == 1
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    for rid, toks in solo_baseline.items():
+        assert outs[rid] == toks
+
+
+# ---------------------------------------------------------------------------
+# hedged retries
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_hedge_loser_cancelled_frees_blocks(granite,
+                                                  solo_baseline):
+    """Slow-engine chaos makes stragglers; hedged re-dispatch races a
+    second copy. First completion wins, the loser is cancelled and its
+    blocks freed — proven by the close() leak check run() applies to
+    every surviving session — and outputs stay token-identical."""
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2, hedge_after=4,
+        chaos=FleetChaosConfig(seed=3, slow_prob=0.25, slow_ticks=6),
+    ))
+    outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
+    st = fl.last_stats
+    assert st["hedges"]["dispatched"] >= 1
+    # every dispatched hedge resolved: won the race or was cancelled
+    assert (st["hedges"]["won"] + st["hedges"]["lost"]
+            == st["hedges"]["dispatched"])
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    for rid, toks in solo_baseline.items():
+        assert outs[rid] == toks, f"rid {rid} diverged under hedging"
+    # hedge losers show up as engine-local cancellations, never as a
+    # fleet-level terminal status
+    cancelled = sum(
+        e["status_counts"].get("cancelled", 0)
+        for e in st["engines"].values()
+    )
+    assert cancelled >= st["hedges"]["won"]
+    assert "cancelled" not in st["status_counts"]
+
+
+def test_fleet_retry_after_shed(granite):
+    """An engine-local shed is not fleet-terminal: the fleet retries on
+    another replica with capped backoff and the request completes."""
+    eng = _engine(granite, queue_limit=2, queue_policy="shed-newest")
+    fl = Fleet(eng, FleetConfig(num_engines=2, max_retries=4))
+    outs, fin = fl.run([_req(r, max_new=4) for r in range(10)])
+    assert sorted(fin) == list(range(10))
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    assert fl.last_stats["retries"] >= 1
+    shed_local = sum(
+        e["status_counts"].get("shed", 0)
+        for e in fl.last_stats["engines"].values()
+    )
+    assert shed_local >= 1  # sheds happened, the fleet absorbed them
+
+
+# ---------------------------------------------------------------------------
+# drain, restart, deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_graceful_drain(granite, solo_baseline):
+    """fleet.drain(eid): no NEW admissions, queued work migrates now,
+    in-flight finishes, then the replica retires through the full
+    close() checks (block-leak audit included)."""
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(num_engines=2))
+    fired = []
+
+    def on_tok(rid, tok):
+        if not fired:
+            fired.append(True)
+            fl.drain(0)
+
+    outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)],
+                       on_token=on_tok)
+    st = fl.last_stats
+    assert st["drains"] == 1
+    assert st["engines"][0]["state"] == "dead"  # retired after draining
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    for rid, toks in solo_baseline.items():
+        assert outs[rid] == toks
+
+
+def test_fleet_restart_rejoins_pool(granite, solo_baseline):
+    """A killed engine rejoins as a fresh session after restart_after
+    ticks (restart-from-checkpoint path) and the run still completes
+    token-identically."""
+    eng = _engine(granite)
+    built = []
+
+    def factory(eid):
+        built.append(eid)
+        return eng  # params still resident — a real deploy restores
+
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2, restart_after=3,
+        chaos=FleetChaosConfig(seed=5, kills=((2, 1),)),
+    ), restart_factory=factory)
+    outs, fin = fl.run([_req(r, arrival=r) for r in range(8)])
+    assert fl.last_stats["restarts"] == 1 and built == [1]
+    assert fl.last_stats["engines"][1]["restarts"] == 1
+    assert all(rec["status"] == "completed" for rec in fin.values())
+    for rid, toks in solo_baseline.items():
+        assert outs[rid] == toks
+
+
+def test_fleet_migration_preserves_absolute_deadlines(granite):
+    """Deadline carryover across fleet re-admission: a request migrated
+    off a killed engine times out at its ORIGINAL absolute deadline —
+    migration must not grant a fresh deadline budget."""
+    eng = _engine(granite)
+    doomed = _req(1, max_new=40, deadline=6)  # can never finish 40 by 7
+    keeper = _req(0, max_new=24)  # keeps the survivor ticking 1:1
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2,
+        chaos=FleetChaosConfig(seed=2, kills=((3, 1),)),
+    ))
+    outs, fin = fl.run([keeper, doomed])
+    rec = fin[1]
+    assert rec["status"] == "timeout" and rec["migrations"] == 1
+    # expire() fires on the first tick PAST arrival + deadline — the
+    # original anchor, despite the mid-flight engine swap.
+    assert rec["finished_at"] == doomed.arrival + 6 + 1
+    assert fin[0]["status"] == "completed"
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_timeline_and_stats_aggregation(granite, tmp_path):
+    """The JSONL timeline follows the documented schema and fleet
+    last_stats aggregates per-engine + fleet-wide without hand-summing
+    engine dicts."""
+    path = str(tmp_path / "timeline.jsonl")
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(
+        num_engines=3, timeline_path=path,
+        chaos=FleetChaosConfig(seed=1, kills=((3, 0),)),
+    ))
+    _outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
+    rows = [json.loads(line) for line in open(path)]
+    assert len(rows) == fl.last_stats["ticks"]
+    for i, row in enumerate(rows):
+        assert row["tick"] == i
+        assert set(row["engines"]) == {"0", "1", "2"}
+        for erow in row["engines"].values():
+            assert erow["state"] in ("live", "degraded", "draining",
+                                     "dead")
+            assert "hb_age" in erow
+            if erow["state"] != "dead":
+                for k in ("occupancy", "free_blocks", "queue_depth",
+                          "active", "decoding", "stall_ticks"):
+                    assert k in erow
+        for k in ("pending", "inflight", "finished", "migrations",
+                  "retries", "hedges"):
+            assert k in row["fleet"]
+    # the kill is visible in the timeline...
+    assert rows[-1]["engines"]["0"]["state"] == "dead"
+    assert rows[-1]["fleet"]["finished"] == 8
+    # ...and the aggregation ties out against the run
+    st = fl.last_stats
+    assert st["mode"] == "fleet" and st["num_engines"] == 3
+    assert sum(st["status_counts"].values()) == len(fin)
+    assert set(st["engines"]) == {0, 1, 2}
+    assert st["timeline_rows"] == len(rows)
+    local_completed = sum(
+        e["status_counts"].get("completed", 0)
+        for e in st["engines"].values()
+    )
+    assert local_completed == st["status_counts"]["completed"]
+
+
+def test_fleet_rejects_per_request_callbacks(granite):
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(num_engines=2))
+    bad = _req(0, on_token=lambda rid, tok: None)
+    with pytest.raises(ValueError, match="per-request callbacks"):
+        fl.run([bad])

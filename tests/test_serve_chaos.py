@@ -152,6 +152,57 @@ def test_storm_deadlines_visible_only():
     assert 1 not in sched.finished
 
 
+def test_preempt_requeue_preserves_absolute_deadlines():
+    """Deadline carryover: TTFT/total deadlines stay anchored at the
+    ORIGINAL arrival tick through preempt-and-requeue — re-admission
+    must not grant a fresh deadline budget."""
+    pool = BlockPool(1 + 8, BS)
+    sched = Scheduler(1, pool, 64, preempt=True)
+    r = _req(0, arrival=5, ttft_deadline=30, deadline=20)
+    sched.submit(r)
+    e = sched.queue[0]
+    assert (e.ttft_at, e.deadline_at) == (35, 25)  # arrival-anchored
+    (slot,) = sched.admit(6, seq_of=lambda rid: list(r.prompt))
+    assert (slot.ttft_at, slot.deadline_at) == (35, 25)
+    sched.preempt_slot(slot, 9, lambda rid: list(r.prompt))
+    e2 = sched.queue[0]
+    # NOT re-anchored at the preemption tick (would be 39/29):
+    assert (e2.ttft_at, e2.deadline_at) == (35, 25)
+    (slot2,) = sched.admit(10, seq_of=lambda rid: list(r.prompt))
+    assert (slot2.ttft_at, slot2.deadline_at) == (35, 25)
+    assert sched.expire(25) == 0
+    assert sched.expire(26) == 1  # original total deadline fires
+    assert sched.finished[0]["status"] == "timeout"
+    assert sched.finished[0]["reason"] == "deadline"
+
+
+def test_fleet_resubmit_preserves_original_deadlines():
+    """Cross-engine re-admission (Scheduler.resubmit with a saved
+    progress record) keeps deadlines anchored at req.arrival, and a
+    resumed first_done request is exempt from the TTFT sweep."""
+    r = _req(0, arrival=5, ttft_deadline=4, deadline=20, max_new=8)
+    resume = {"seq": list(r.prompt) + [3, 7], "generated": 2,
+              "first_done": True, "first_token_at": 7,
+              "admitted_at": 6, "preemptions": 1}
+    pool = BlockPool(1 + 8, BS)
+    survivor = Scheduler(1, pool, 64)
+    survivor.resubmit(r, resume)
+    e = survivor.queue[0]
+    # Anchored at the ORIGINAL arrival (5), not the migration tick.
+    assert (e.ttft_at, e.deadline_at) == (9, 25)
+    # TTFT already satisfied on the dead engine -> no ttft timeout even
+    # though now > ttft_at; the total deadline still applies.
+    assert survivor.expire(12) == 0
+    assert survivor.expire(26) == 1
+    assert survivor.finished[0]["reason"] == "deadline"
+    # A NEVER-started copy migrated the same way keeps its TTFT.
+    r2 = _req(1, arrival=5, ttft_deadline=4)
+    fresh = Scheduler(1, BlockPool(1 + 8, BS), 64)
+    fresh.resubmit(r2, None)
+    assert fresh.expire(10) == 1
+    assert fresh.finished[1]["reason"] == "ttft"
+
+
 def test_preempt_requires_strictly_lower_priority():
     pool = BlockPool(1 + 2, BS)
     sched = Scheduler(2, pool, 64, preempt=True)
