@@ -59,6 +59,14 @@ echo "[verify] fleet lane: multi-engine chaos sweep (REPRO_FLEET=1, wider seeds)
 # and every surviving pool passes its per-tick invariant audit).
 REPRO_FLEET=1 python -m pytest -x -q tests/test_fleet.py
 
+echo "[verify] obs lane: JSONL-sink smoke serve + metric schema lint"
+# Runs a solo chunked serve, a 2-replica autoscaling fleet, and a
+# checkpoint-retry fault through a real JsonlSink, then cross-checks
+# every emitted metric name / row field against the reference doc
+# (src/repro/obs/README.md) — an undocumented emission fails verify,
+# so the metrics reference can never silently drift from the code.
+python -m repro.obs.lint
+
 echo "[verify] kernel micro-bench + serving bench + roofline (smoke mode)"
 # kernels_micro exercises every ops.* implementation (including the
 # Pallas custom-VJP kernels in interpret mode, the grouped-GEMM

@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import store
+from repro.obs.tracker import NULL, Tracker
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 
@@ -44,6 +45,7 @@ class CheckpointManager:
         io_backoff_cap: float = 1.0,
         fault_hook: Optional[Callable[[str, int], None]] = None,
         sleep: Callable[[float], None] = time.sleep,
+        tracker: Optional[Tracker] = None,
     ):
         self.directory = directory
         self.max_to_keep = max_to_keep
@@ -58,6 +60,10 @@ class CheckpointManager:
         self.io_backoff_cap = io_backoff_cap
         self.fault_hook = fault_hook
         self._sleep = sleep
+        # Retries/fallbacks are exported as counters so fleet-level
+        # restart pressure on the store shows up in the same JSONL
+        # stream as serve/train metrics (obs/README.md).
+        self.tracker = tracker if tracker is not None else NULL
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
 
@@ -79,6 +85,7 @@ class CheckpointManager:
                     raise
                 delay = min(self.io_backoff_cap,
                             self.io_backoff * (2 ** attempt))
+                self.tracker.count("checkpoint.io_retries")
                 print(
                     f"[checkpoint] {op} failed "
                     f"({type(e).__name__}: {e}); retry "
@@ -169,6 +176,7 @@ class CheckpointManager:
                 raise
             except Exception as e:  # torn/corrupt payload
                 last_err = e
+                self.tracker.count("checkpoint.fallbacks")
                 print(
                     f"[checkpoint] step {step} at {path} is corrupt "
                     f"({type(e).__name__}: {e}); falling back to the "

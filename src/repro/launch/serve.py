@@ -42,10 +42,19 @@ enables hedged re-dispatch for stragglers, ``--fleet-restart-after``
 rejoins killed engines after a delay — with ``--ckpt-dir`` the
 replacement engine is rebuilt from the latest checkpoint
 (restart-from-checkpoint), otherwise the dead replica's params are
-reused — and ``--fleet-timeline`` streams the per-tick routing-signal
-JSONL (schema on ``repro.serve.TimelineWriter``). Per-request records
-gain ``engine`` / ``migrations`` / ``retries``; the stats line
-aggregates across replicas.
+reused — and ``--fleet-timeline`` streams the per-tick engine + fleet
+observability rows as JSONL (one schema for both kinds, documented on
+``repro.serve.TimelineWriter`` and in ``repro/obs/README.md``).
+``--fleet-autoscale MAX`` arms the signal-driven autoscaler: sustained
+overload spawns replicas up to MAX, sustained idleness drains them
+back down. Per-request records gain ``engine`` / ``migrations`` /
+``retries``; the stats line aggregates across replicas.
+
+``--obs-jsonl PATH`` streams the full observability feed (engine rows,
+tick-phase spans, scheduler counters, end-of-run histogram summaries —
+metric reference in ``src/repro/obs/README.md``) to PATH in solo and
+fleet mode alike; ``--jax-profile`` wraps every jitted mixed step in a
+``jax.profiler`` step annotation so device traces line up with ticks.
 """
 from __future__ import annotations
 
@@ -126,15 +135,32 @@ def main() -> None:
     fl.add_argument("--fleet-timeline", default="",
                     metavar="PATH",
                     help="write the per-tick routing-signal JSONL here")
+    fl.add_argument("--fleet-autoscale", type=int, default=0,
+                    metavar="MAX",
+                    help="autoscale replicas between --fleet and MAX "
+                         "from exported overload/idle signals (0 = off)")
+    ob = ap.add_argument_group("observability")
+    ob.add_argument("--obs-jsonl", default="", metavar="PATH",
+                    help="stream tracker rows (engine series, spans, "
+                         "counters; see src/repro/obs/README.md) here")
+    ob.add_argument("--jax-profile", action="store_true",
+                    help="annotate each jitted mixed step for "
+                         "jax.profiler traces")
     args = ap.parse_args()
-    if args.fleet > 1 and not (args.paged
-                               and args.admission == "chunked"):
+    # --fleet 1 alone is just a solo engine; with --fleet-autoscale MAX
+    # it is a real fleet that starts at one replica and grows.
+    fleet_mode = args.fleet > 1 or (
+        args.fleet >= 1 and args.fleet_autoscale > args.fleet)
+    if fleet_mode and not (args.paged
+                           and args.admission == "chunked"):
         ap.error("--fleet needs --paged with --admission chunked")
 
     from repro.configs import get_config, get_reduced
     from repro.models import model_zoo as zoo
     from repro.models import param as pm
+    from repro.obs import JsonlSink, Tracker
     from repro.serve import (
+        AutoscaleConfig,
         ChaosConfig,
         Fleet,
         FleetChaosConfig,
@@ -179,8 +205,11 @@ def main() -> None:
                      default_ttft_deadline=args.ttft_deadline,
                      default_deadline=args.deadline,
                      watchdog_ticks=args.watchdog_ticks,
-                     chaos=chaos)
-    eng = ServeEngine(params, cfg, sc)
+                     chaos=chaos,
+                     jax_profile=args.jax_profile)
+    tracker = (Tracker((JsonlSink(args.obs_jsonl),))
+               if args.obs_jsonl else None)
+    eng = ServeEngine(params, cfg, sc, tracker=tracker)
     demo = [[1, 2, 3], [10, 20], [7, 7, 7, 7]][: args.max_batch]
     if args.paged:
         # Staggered arrivals show mid-flight admission; --stream prints
@@ -199,7 +228,7 @@ def main() -> None:
                 + (f" ({detail})" if detail else ""), flush=True))
             if args.admission == "chunked" else None
         )
-        if args.fleet > 1:
+        if fleet_mode:
             kills = tuple(
                 (int(t), int(e))
                 for t, e in (spec.split(":") for spec in args.fleet_kill)
@@ -214,13 +243,20 @@ def main() -> None:
                     print(f"[serve] engine {eid}: rebuilding replica "
                           f"from {args.ckpt_dir or 'fresh params'}")
                     return ServeEngine(load_params(), cfg, sc)
+            autoscale = None
+            if args.fleet_autoscale > args.fleet:
+                autoscale = AutoscaleConfig(
+                    min_engines=args.fleet,
+                    max_engines=args.fleet_autoscale,
+                )
             fleet = Fleet(eng, FleetConfig(
                 num_engines=args.fleet,
                 hedge_after=args.fleet_hedge_after,
                 restart_after=args.fleet_restart_after,
                 timeline_path=args.fleet_timeline or None,
                 chaos=FleetChaosConfig(kills=kills) if kills else None,
-            ), restart_factory=restart_factory)
+                autoscale=autoscale,
+            ), restart_factory=restart_factory, tracker=tracker)
             outs, stats = fleet.run(reqs, on_token=on_token,
                                     on_event=on_event)
             for i, p in enumerate(demo):
@@ -238,7 +274,12 @@ def main() -> None:
                   f"retries={es['retries']} kills={es['kills']} "
                   f"restarts={es['restarts']} hedges={es['hedges']}"
                   + (f" timeline={es['timeline_path']}"
-                     if es["timeline_path"] else ""))
+                     if es["timeline_path"] else "")
+                  + (f" scale_ups={es['scale_ups']} "
+                     f"scale_downs={es['scale_downs']}"
+                     if autoscale is not None else ""))
+            if tracker is not None:
+                tracker.close()
             return
         outs, stats = eng.serve(reqs, on_token=on_token,
                                 on_event=on_event)
@@ -266,6 +307,8 @@ def main() -> None:
               f"steps={es['mixed_steps']} "
               f"compile_count={es['compile_count']} "
               f"prefix_hit_frac={es['prefix_hit_frac']:.2f}" + extra)
+        if tracker is not None:
+            tracker.close()
         return
     for i, seq in enumerate(eng.generate(demo, max_new=args.max_new)):
         print(f"[serve] req{i}: {demo[i]} -> {seq[len(demo[i]):]}")

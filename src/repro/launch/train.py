@@ -58,6 +58,9 @@ def main() -> None:
                     help="dense checkpoint dir to sparse-upcycle from")
     ap.add_argument("--peak-lr", type=float, default=0.01)
     ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--obs-jsonl", default="", metavar="PATH",
+                    help="stream per-step train rows + checkpoint "
+                         "counters as JSONL (src/repro/obs/README.md)")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced
@@ -113,8 +116,16 @@ def main() -> None:
                       dispatch=args.dispatch).resolve()
     print(f"[train] kernels: moe={ac.moe_impl} attn={ac.attn_impl} "
           f"dispatch={ac.dispatch} remat={ac.remat}")
-    tr = Trainer(cfg, opt, it, args.ckpt_dir, ac=ac, tc=tc, preemption=sig)
+    tracker = None
+    if args.obs_jsonl:
+        from repro.obs import JsonlSink, Tracker
+
+        tracker = Tracker((JsonlSink(args.obs_jsonl),))
+    tr = Trainer(cfg, opt, it, args.ckpt_dir, ac=ac, tc=tc, preemption=sig,
+                 tracker=tracker)
     out = tr.run(args.steps, init_params=init_params)
+    if tracker is not None:
+        tracker.close()
     print(f"[train] finished at step {int(out['state']['step'])}, "
           f"loss {float(out['metrics']['loss']):.4f}")
 

@@ -91,6 +91,32 @@ fleet          :class:`Fleet` (fleet.py) drives N engine replicas as
                migrates a dead engine's work to survivors with saved
                progress; per-tick JSONL signal timeline
                (router.TimelineWriter documents the schema)
+autoscaling    :class:`Autoscaler` (fleet.py, ``FleetConfig.autoscale``
+               = :class:`AutoscaleConfig`): sustained overload (mean
+               occupancy / dispatchable backlog / shed-retry delta
+               over ``up_ticks`` consecutive fleet ticks) spawns a
+               replica via ``restart_factory``; sustained idleness
+               (``down_ticks``) drains the highest-eid replica
+               through the leak-checked retire path; decisions read
+               ONLY exported per-tick signals on the fleet tick
+               clock — no wall-clock, so seeded runs are replayable
+observability  :class:`repro.obs.Tracker` rows through every layer
+               (obs/README.md is the metric + row-schema reference):
+               per-tick ``kind="engine"`` rows (occupancy,
+               free_blocks, queue_depth, active, decoding,
+               stall_ticks, tokens, mixed_steps, compiles — tagged
+               ``engine=<eid>`` in fleet mode), per-tick
+               ``kind="fleet"`` rows (tick, engines{eid: status/load/
+               signals}, fleet{pending, inflight, finished, tokens,
+               replicas, migrations, retries, hedges, scale_ups,
+               scale_downs}), spans timing tick phases (admission /
+               prefix / draft / mixed_step / host_sync / emit), and
+               scheduler/checkpoint counters — all host-side reads
+               of state the tick loop already owns (ZERO extra
+               device syncs; ``compile_count == 1`` still holds).
+               TimelineWriter is now a kind-filtered JSONL sink of
+               this protocol, so engine + fleet rows share one file
+               and one schema
 =============  =====================================================
 
 Request lifecycle::
@@ -198,7 +224,13 @@ from repro.serve.engine import (
     ServeConfig,
     ServeEngine,
 )
-from repro.serve.fleet import Fleet, FleetChaosConfig, FleetConfig
+from repro.serve.fleet import (
+    AutoscaleConfig,
+    Autoscaler,
+    Fleet,
+    FleetChaosConfig,
+    FleetConfig,
+)
 from repro.serve.paged_cache import (
     BlockPool,
     PrefixMatch,
@@ -210,6 +242,8 @@ from repro.serve.scheduler import Request, Scheduler, Slot
 from repro.serve.speculative import SpecRunner, sample_token, verify_accept
 
 __all__ = [
+    "AutoscaleConfig",
+    "Autoscaler",
     "BlockPool",
     "ChaosConfig",
     "ChunkedSession",

@@ -45,6 +45,7 @@ pin that regime.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Optional
@@ -55,6 +56,7 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.models import model_zoo as zoo
+from repro.obs.tracker import NULL, Tracker
 from repro.serve.paged_cache import BlockPool, bucket_len
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.speculative import sample_token, verify_accept
@@ -157,6 +159,10 @@ class ServeConfig:
     # when chaos is set). Test/debug knob — O(capacity) per tick.
     audit_invariants: bool = False
     chaos: Optional[ChaosConfig] = None
+    # Wrap the jitted mixed/verify step in a
+    # jax.profiler.StepTraceAnnotation (visible when a profiler trace
+    # is active, e.g. jax.profiler.start_trace; free otherwise).
+    jax_profile: bool = False
 
 
 class ServeEngine:
@@ -170,6 +176,7 @@ class ServeEngine:
         ctx: Optional[ShardCtx] = None,
         draft_params=None,
         draft_cfg: Optional[ArchConfig] = None,
+        tracker: Optional[Tracker] = None,
     ):
         # sc defaults to None, NOT ServeConfig(): a dataclass default
         # would be one shared mutable instance across every engine.
@@ -234,6 +241,9 @@ class ServeEngine:
         self.params, self.cfg, self.sc, self.ac, self.ctx = (
             params, cfg, sc, ac, ctx
         )
+        # Engine-level default tracker; open_session / Fleet may pass a
+        # per-session one (bound per replica). NULL = zero overhead.
+        self.tracker = tracker if tracker is not None else NULL
         cdtype = jnp.bfloat16 if sc.cache_dtype == "bfloat16" else jnp.float32
 
         def _prefill(params, tokens, cache):
@@ -408,6 +418,7 @@ class ServeEngine:
         on_token: Optional[Callable[[int, int], None]] = None,
         on_event: Optional[Callable[[int, str, str], None]] = None,
         rng=None,
+        tracker: Optional[Tracker] = None,
     ):
         """Run a continuous-batching session over ``requests``.
 
@@ -438,7 +449,8 @@ class ServeEngine:
             raise ValueError("serve() needs ServeConfig(paged=True)")
         if self.sc.admission == "chunked":
             return self._serve_chunked(requests, on_token=on_token,
-                                       on_event=on_event, rng=rng)
+                                       on_event=on_event, rng=rng,
+                                       tracker=tracker)
         return self._serve_prefill_on_join(requests, on_token=on_token,
                                            rng=rng)
 
@@ -525,7 +537,9 @@ class ServeEngine:
     # -- chunked mixed-step loop (the paged default) --------------------
 
     def open_session(self, *, on_token=None, on_event=None, rng=None,
-                     fleet_mode: bool = False) -> "ChunkedSession":
+                     fleet_mode: bool = False,
+                     tracker: Optional[Tracker] = None
+                     ) -> "ChunkedSession":
         """Open a tick-steppable chunked serve session (the fleet hook).
 
         The solo :meth:`serve` path is ``open_session`` + submit all +
@@ -543,11 +557,13 @@ class ServeEngine:
                 "admission='chunked')"
             )
         return ChunkedSession(self, on_token=on_token, on_event=on_event,
-                              rng=rng, fleet_mode=fleet_mode)
+                              rng=rng, fleet_mode=fleet_mode,
+                              tracker=tracker)
 
-    def _serve_chunked(self, requests, *, on_token, on_event, rng):
+    def _serve_chunked(self, requests, *, on_token, on_event, rng,
+                       tracker=None):
         sess = self.open_session(on_token=on_token, on_event=on_event,
-                                 rng=rng)
+                                 rng=rng, tracker=tracker)
         for r in requests:
             sess.submit(r)
         while sess.tick():
@@ -702,7 +718,8 @@ class ChunkedSession:
     """
 
     def __init__(self, engine: ServeEngine, *, on_token=None,
-                 on_event=None, rng=None, fleet_mode: bool = False):
+                 on_event=None, rng=None, fleet_mode: bool = False,
+                 tracker: Optional[Tracker] = None):
         self.eng = engine
         sc = engine.sc
         self.sc = sc
@@ -796,6 +813,17 @@ class ChunkedSession:
         self.step = 0
         self._stuck = 0
         self._closed = False
+        self._tokens_emitted = 0
+        # Session tracker: explicit > engine default > NULL. Solo
+        # sessions stamp rows on their own step clock; fleet-bound
+        # trackers arrive with the fleet tick clock already set.
+        trk = tracker if tracker is not None else engine.tracker
+        if trk.enabled and trk.clock is None:
+            trk = trk.bind(clock=lambda: self.step)
+        self.trk = trk
+        # Lifecycle counters (admissions / sheds / timeouts / ...) are
+        # emitted at the source, the scheduler's terminal chokepoints.
+        self.sched.tracker = trk
 
     # -- request plumbing ----------------------------------------------
     def submit(self, req: Request, resume: Optional[dict] = None
@@ -892,6 +920,7 @@ class ChunkedSession:
     def _emit(self, req, slot, tok: int) -> None:
         self.outs[req.rid].append(tok)
         slot.generated += 1
+        self._tokens_emitted += 1
         if self.on_token is not None:
             self.on_token(req.rid, tok)
         if req.on_token is not None:
@@ -978,7 +1007,36 @@ class ChunkedSession:
         chunk planning -> one mixed step -> bookkeeping -> audit), the
         loop body of the original chunked serve loop. Returns whether
         the session still has work afterwards — the solo loop is
-        ``while sess.tick(): pass``."""
+        ``while sess.tick(): pass``.
+
+        With a tracker attached, the tick is wrapped in a ``tick`` span
+        (phases nested under it) and one ``engine`` row — the per-tick
+        queue-depth / occupancy / stall time series — is emitted per
+        call. All tracked values are pure host-side reads: tracking
+        adds ZERO device syncs (the mixed step's single logits pull
+        stays the only one)."""
+        trk = self.trk
+        if not trk.enabled:
+            alive = self._tick_inner()
+        else:
+            with trk.span("tick"):
+                alive = self._tick_inner()
+            sig = self.signals()
+            trk.row(
+                "engine",
+                occupancy=round(sig["occupancy"], 4),
+                free_blocks=sig["free_blocks"],
+                queue_depth=sig["queue_depth"],
+                active=sig["active"],
+                decoding=sig["decoding"],
+                stall_ticks=sig["stall_ticks"],
+                tokens=self._tokens_emitted,
+                mixed_steps=self.stats["mixed_steps"],
+                compiles=len(self.stats["compile_events"]),
+            )
+        return alive
+
+    def _tick_inner(self) -> bool:
         eng, sc = self.eng, self.sc
         sched, pool, stats = self.sched, self.pool, self.stats
         bs, B, NC, C = self.bs, self.B, self.NC, self.C
@@ -999,49 +1057,51 @@ class ChunkedSession:
         # host bookkeeping, once per tick, no device syncs.
         occ = (pool.capacity - pool.num_free) / pool.capacity
         stats["peak_occupancy"] = max(stats["peak_occupancy"], occ)
-        sched.expire(step)
-        sched.enforce(step, occ)
-        # -- admission: slots + blocks, shared prefix mapped copy-free;
-        # CoW partial tails copied device-side. May preempt-and-requeue
-        # lower-priority actives (preempt=True).
-        admitted = sched.admit(step, seq_of=self._seq_of)
-        for slot in admitted:
-            i = slot.index
-            self.slot_tables[i, :] = 0
-            self.slot_tables[i, :len(slot.blocks)] = slot.blocks
-            if slot.cow is not None:
-                src, dst, ntok = slot.cow
-                self.cache = eng._copy_block(
-                    self.cache, jnp.asarray(src, jnp.int32),
-                    jnp.asarray(dst, jnp.int32),
-                )
-                slot.length += ntok
-                slot.cow = None
-            self.lengths[i] = slot.length
-            stats["prefix_hit_tokens"] += slot.prefix_tokens
-            stats["prompt_tokens"] += len(slot.eff_prompt)
-            if self.runner is not None:
-                self.runner.set_slot(slot)
+        with self.trk.span("admission"):
+            sched.expire(step)
+            sched.enforce(step, occ)
+            # -- admission: slots + blocks, shared prefix mapped
+            # copy-free; CoW partial tails copied device-side. May
+            # preempt-and-requeue lower-priority actives (preempt=True).
+            admitted = sched.admit(step, seq_of=self._seq_of)
+            for slot in admitted:
+                i = slot.index
+                self.slot_tables[i, :] = 0
+                self.slot_tables[i, :len(slot.blocks)] = slot.blocks
+                if slot.cow is not None:
+                    src, dst, ntok = slot.cow
+                    self.cache = eng._copy_block(
+                        self.cache, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32),
+                    )
+                    slot.length += ntok
+                    slot.cow = None
+                self.lengths[i] = slot.length
+                stats["prefix_hit_tokens"] += slot.prefix_tokens
+                stats["prompt_tokens"] += len(slot.eff_prompt)
+                if self.runner is not None:
+                    self.runner.set_slot(slot)
         # -- in-flight prefix promotion: a follower's shared-but-pending
         # blocks become readable only once the donor has computed past
         # their end (promote in contiguous order); a dead or recycled
         # donor invalidates the follower's mapped suffix ->
         # preempt-and-requeue (copy-free recovery re-prefills from
         # registered blocks).
-        for slot in list(sched.active):
-            while slot.pending_shared:
-                end, donor, dseq = slot.pending_shared[0]
-                if donor.request is None or donor.admit_seq != dseq:
-                    sched.preempt_slot(slot, step, self._seq_of)
-                    break
-                if donor.length < end or slot.length + bs != end:
-                    break
-                slot.pending_shared.pop(0)
-                slot.length = end
-                self.lengths[slot.index] = end
-                slot.prefix_tokens += bs
-                stats["prefix_hit_tokens"] += bs
-                stats["inflight_promotions"] += 1
+        with self.trk.span("prefix"):
+            for slot in list(sched.active):
+                while slot.pending_shared:
+                    end, donor, dseq = slot.pending_shared[0]
+                    if donor.request is None or donor.admit_seq != dseq:
+                        sched.preempt_slot(slot, step, self._seq_of)
+                        break
+                    if donor.length < end or slot.length + bs != end:
+                        break
+                    slot.pending_shared.pop(0)
+                    slot.length = end
+                    self.lengths[slot.index] = end
+                    slot.prefix_tokens += bs
+                    stats["prefix_hit_tokens"] += bs
+                    stats["inflight_promotions"] += 1
         stats["stall_ticks_max"] = max(
             stats["stall_ticks_max"], sched.stall_ticks
         )
@@ -1141,34 +1201,42 @@ class ChunkedSession:
             cstart[ci] = start
             clen[ci] = n
 
+        # Optional profiler hook: annotates the jitted mixed/verify
+        # step in a jax.profiler trace when one is active; a no-op
+        # context otherwise.
+        prof = (jax.profiler.StepTraceAnnotation("mixed_step",
+                                                 step_num=step)
+                if sc.jax_profile else contextlib.nullcontext())
         if self.spec:
             # draft first: catch behind draft caches up, then run the
             # lockstep k-token draft loop; decode slots become
             # width-(1+k_eff) verify lanes on the target.
-            runner = self.runner
-            runner.catch_up(sched.active, self._seq_of)
-            dmap = runner.draft(decoding, self.cur)
-            vtoks, vtab = self.vtoks, self.vtab
-            vstart, vlen = self.vstart, self.vlen
-            vtoks[:] = 0
-            vtab[:] = 0
-            vstart[:] = 0
-            vlen[:] = 0
-            for s in decoding:
-                i = s.index
-                drafted = dmap[i][0] if i in dmap else []
-                vtoks[i, 0] = self.cur[i, 0]
-                for dj, d in enumerate(drafted):
-                    vtoks[i, 1 + dj] = d
-                vtab[i] = self.slot_tables[i]
-                vstart[i] = self.lengths[i]
-                vlen[i] = 1 + len(drafted)
-            self.cache, logits = eng._verify_step(
-                eng.params, jnp.asarray(vtoks), jnp.asarray(ctoks),
-                self.cache, jnp.asarray(vtab), jnp.asarray(vstart),
-                jnp.asarray(vlen), jnp.asarray(ctab),
-                jnp.asarray(cstart), jnp.asarray(clen),
-            )
+            with self.trk.span("draft"):
+                runner = self.runner
+                runner.catch_up(sched.active, self._seq_of)
+                dmap = runner.draft(decoding, self.cur)
+                vtoks, vtab = self.vtoks, self.vtab
+                vstart, vlen = self.vstart, self.vlen
+                vtoks[:] = 0
+                vtab[:] = 0
+                vstart[:] = 0
+                vlen[:] = 0
+                for s in decoding:
+                    i = s.index
+                    drafted = dmap[i][0] if i in dmap else []
+                    vtoks[i, 0] = self.cur[i, 0]
+                    for dj, d in enumerate(drafted):
+                        vtoks[i, 1 + dj] = d
+                    vtab[i] = self.slot_tables[i]
+                    vstart[i] = self.lengths[i]
+                    vlen[i] = 1 + len(drafted)
+            with self.trk.span("mixed_step"), prof:
+                self.cache, logits = eng._verify_step(
+                    eng.params, jnp.asarray(vtoks), jnp.asarray(ctoks),
+                    self.cache, jnp.asarray(vtab), jnp.asarray(vstart),
+                    jnp.asarray(vlen), jnp.asarray(ctab),
+                    jnp.asarray(cstart), jnp.asarray(clen),
+                )
             chunk_off = B * self.K1
         else:
             dec_tables, dec_lengths = self.dec_tables, self.dec_lengths
@@ -1177,13 +1245,14 @@ class ChunkedSession:
             for s in decoding:
                 dec_tables[s.index] = self.slot_tables[s.index]
                 dec_lengths[s.index] = self.lengths[s.index]
-            self.cache, logits = eng._mixed_step(
-                eng.params, jnp.asarray(self.cur), jnp.asarray(ctoks),
-                self.cache, jnp.asarray(dec_tables),
-                jnp.asarray(dec_lengths),
-                jnp.asarray(ctab), jnp.asarray(cstart),
-                jnp.asarray(clen),
-            )
+            with self.trk.span("mixed_step"), prof:
+                self.cache, logits = eng._mixed_step(
+                    eng.params, jnp.asarray(self.cur), jnp.asarray(ctoks),
+                    self.cache, jnp.asarray(dec_tables),
+                    jnp.asarray(dec_lengths),
+                    jnp.asarray(ctab), jnp.asarray(cstart),
+                    jnp.asarray(clen),
+                )
             chunk_off = B
         step += 1
         self.step = step
@@ -1194,76 +1263,81 @@ class ChunkedSession:
         if n_compiled != self._compiled:
             self._compiled = n_compiled
             stats["compile_events"].append(step)
-        lg_host = np.asarray(logits)  # ONE host sync per mixed step
+            self.trk.count("serve.compile_events", t=step)
+        with self.trk.span("host_sync"):
+            lg_host = np.asarray(logits)  # ONE host sync per mixed step
 
-        # -- chunk bookkeeping first: lengths advance, prefix blocks
-        # register, completed prompts sample their next token (the
-        # FIRST token for fresh admissions; for re-admitted preemption
-        # victims, the continuation at index generated).
-        for ci, (slot, start, n) in enumerate(chunks):
-            i, req = slot.index, slot.request
-            slot.length = start + n
-            self.lengths[i] = slot.length
-            slot.reg_blocks, slot.reg_parent = pool.register_prefix(
-                slot.eff_prompt, slot.blocks, slot.length,
-                start_block=slot.reg_blocks, parent=slot.reg_parent,
-            )
-            if slot.length == len(slot.eff_prompt):
-                if not slot.first_done:
-                    slot.first_token_at = step
-                    slot.first_done = True
-                tok = eng._sample_one(lg_host[chunk_off + ci],
-                                      self.seed0, req.rid,
+        with self.trk.span("emit"):
+            # -- chunk bookkeeping first: lengths advance, prefix
+            # blocks register, completed prompts sample their next
+            # token (the FIRST token for fresh admissions; for
+            # re-admitted preemption victims, the continuation at
+            # index generated).
+            for ci, (slot, start, n) in enumerate(chunks):
+                i, req = slot.index, slot.request
+                slot.length = start + n
+                self.lengths[i] = slot.length
+                slot.reg_blocks, slot.reg_parent = pool.register_prefix(
+                    slot.eff_prompt, slot.blocks, slot.length,
+                    start_block=slot.reg_blocks, parent=slot.reg_parent,
+                )
+                if slot.length == len(slot.eff_prompt):
+                    if not slot.first_done:
+                        slot.first_token_at = step
+                        slot.first_done = True
+                    tok = eng._sample_one(lg_host[chunk_off + ci],
+                                          self.seed0, req.rid,
+                                          slot.generated)
+                    self._emit(req, slot, tok)
+                    if not self._maybe_finish(slot, tok, step):
+                        slot.decoding = True
+                        self.cur[i, 0] = tok
+
+            # -- decode bookkeeping
+            for slot in decoding:
+                if slot.request is None:
+                    continue  # evicted this tick (deadline / chaos)
+                i, req = slot.index, slot.request
+                if self.spec:
+                    # Exact rejection sampling over this slot's verify
+                    # rows: emit m accepted drafts + 1 correction/
+                    # bonus. Rollback is overwrite-and-mask — length
+                    # simply stops after the last emitted token; stale
+                    # cache positions past it are never attended.
+                    drafted, qrows = dmap.get(i, ([], []))
+                    K1 = self.K1
+                    p_rows = lg_host[i * K1:i * K1 + 1 + len(drafted)]
+                    emitted, acc = verify_accept(
+                        drafted, qrows, p_rows, sc.temperature,
+                        self.seed0, req.rid, slot.generated,
+                    )
+                    stats["spec_drafted"] += len(drafted)
+                    stats["spec_accepted"] += acc
+                    slot.drafted += len(drafted)
+                    slot.accepted += acc
+                    fin = False
+                    for tok in emitted:
+                        slot.length += 1  # verified token is in cache
+                        self.lengths[i] += 1
+                        self._emit(req, slot, tok)
+                        if self._maybe_finish(slot, tok, step):
+                            fin = True
+                            break
+                    if not fin:
+                        self.cur[i, 0] = emitted[-1]
+                        if i in dmap:
+                            # draft wrote positions length..
+                            # length+k_eff in lockstep; the accepted
+                            # region is valid.
+                            slot.draft_length = slot.length
+                    continue
+                slot.length += 1  # cur token entered the cache
+                self.lengths[i] += 1
+                tok = eng._sample_one(lg_host[i], self.seed0, req.rid,
                                       slot.generated)
                 self._emit(req, slot, tok)
                 if not self._maybe_finish(slot, tok, step):
-                    slot.decoding = True
                     self.cur[i, 0] = tok
-
-        # -- decode bookkeeping
-        for slot in decoding:
-            if slot.request is None:
-                continue  # evicted this tick (deadline / chaos)
-            i, req = slot.index, slot.request
-            if self.spec:
-                # Exact rejection sampling over this slot's verify
-                # rows: emit m accepted drafts + 1 correction/bonus.
-                # Rollback is overwrite-and-mask — length simply stops
-                # after the last emitted token; stale cache positions
-                # past it are never attended.
-                drafted, qrows = dmap.get(i, ([], []))
-                K1 = self.K1
-                p_rows = lg_host[i * K1:i * K1 + 1 + len(drafted)]
-                emitted, acc = verify_accept(
-                    drafted, qrows, p_rows, sc.temperature,
-                    self.seed0, req.rid, slot.generated,
-                )
-                stats["spec_drafted"] += len(drafted)
-                stats["spec_accepted"] += acc
-                slot.drafted += len(drafted)
-                slot.accepted += acc
-                fin = False
-                for tok in emitted:
-                    slot.length += 1  # verified token is in cache
-                    self.lengths[i] += 1
-                    self._emit(req, slot, tok)
-                    if self._maybe_finish(slot, tok, step):
-                        fin = True
-                        break
-                if not fin:
-                    self.cur[i, 0] = emitted[-1]
-                    if i in dmap:
-                        # draft wrote positions length..length+k_eff in
-                        # lockstep; the accepted region is valid.
-                        slot.draft_length = slot.length
-                continue
-            slot.length += 1  # cur token entered the cache
-            self.lengths[i] += 1
-            tok = eng._sample_one(lg_host[i], self.seed0, req.rid,
-                                  slot.generated)
-            self._emit(req, slot, tok)
-            if not self._maybe_finish(slot, tok, step):
-                self.cur[i, 0] = tok
         self._tick_audit()
         return True
 
@@ -1307,4 +1381,8 @@ class ChunkedSession:
         assert not missing, (
             f"requests without a terminal status: {sorted(missing)}"
         )
+        # Flush span-duration histograms (``span.tick/...`` summary
+        # rows) — the session tracker is a bind() child, so its
+        # instrument state dies with the session.
+        self.trk.summarize()
         return self.outs, sched.finished

@@ -61,6 +61,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.obs.tracker import NULL, Tracker
 from repro.serve.engine import ServeEngine
 from repro.serve.router import (
     DEAD, DEGRADED, DRAINING, LIVE, Router, RouterConfig, TimelineWriter,
@@ -105,6 +106,75 @@ class FleetChaosConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Deterministic fleet autoscaling policy, evaluated once per
+    fleet tick from the exported routing signals (occupancy, queue
+    depth, pending backlog, shed-driven retries). NO wall-clock reads
+    — decisions are a pure function of the tick clock and seeded
+    signals, so chaos tests stay seeded-reproducible."""
+
+    min_engines: int = 1
+    max_engines: int = 4
+    # Scale UP when, for up_ticks consecutive ticks, mean live-replica
+    # occupancy >= up_occupancy OR dispatchable backlog (pending +
+    # queued) >= up_backlog OR any shed/fail retry fired that tick.
+    up_occupancy: float = 0.85
+    up_backlog: int = 4
+    up_ticks: int = 3
+    # Scale DOWN when, for down_ticks consecutive ticks, the fleet is
+    # idle: zero backlog, zero active slots, mean occupancy <=
+    # down_occupancy. The drained replica retires through the
+    # leak-checked close().
+    down_occupancy: float = 0.10
+    down_ticks: int = 8
+    # Minimum ticks between any two scaling actions.
+    cooldown: int = 8
+
+
+class Autoscaler:
+    """Streak-counting scale policy over :class:`AutoscaleConfig`.
+
+    ``decide`` is called once per fleet tick with host-side signals
+    only; it returns ``"up"``, ``"down"``, or ``None``. Sustained
+    overload (``up_ticks``) spawns a replica, sustained idleness
+    (``down_ticks``) drains one; a cooldown separates actions so a
+    spawn gets time to absorb load before the next decision."""
+
+    def __init__(self, asc: Optional[AutoscaleConfig] = None):
+        self.asc = asc or AutoscaleConfig()
+        self.up_streak = 0
+        self.down_streak = 0
+        self.last_action_at: Optional[int] = None
+
+    def decide(self, tick: int, *, n_live: int, signals: list,
+               backlog: int, shed_delta: int) -> Optional[str]:
+        asc = self.asc
+        if not signals:
+            return None  # nothing alive to measure
+        occ = sum(s["occupancy"] for s in signals) / len(signals)
+        overload = (occ >= asc.up_occupancy
+                    or backlog >= asc.up_backlog
+                    or shed_delta > 0)
+        idle = (backlog == 0 and occ <= asc.down_occupancy
+                and all(s["active"] == 0 for s in signals))
+        self.up_streak = self.up_streak + 1 if overload else 0
+        self.down_streak = self.down_streak + 1 if idle else 0
+        if (self.last_action_at is not None
+                and tick - self.last_action_at < asc.cooldown):
+            return None
+        if self.up_streak >= asc.up_ticks and n_live < asc.max_engines:
+            self.last_action_at = tick
+            self.up_streak = 0
+            return "up"
+        if (self.down_streak >= asc.down_ticks
+                and n_live > asc.min_engines):
+            self.last_action_at = tick
+            self.down_streak = 0
+            return "down"
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetConfig:
     num_engines: int = 2
     router: RouterConfig = dataclasses.field(default_factory=RouterConfig)
@@ -129,6 +199,11 @@ class FleetConfig:
     # Wedged-fleet guard: hard failure if the run exceeds this.
     max_ticks: int = 100_000
     chaos: Optional[FleetChaosConfig] = None
+    # Signal-driven autoscaling (None = fixed fleet). Scale-ups build
+    # the new replica via Fleet's restart_factory when given, else
+    # share replica 0's engine object (sessions are self-contained, so
+    # sharing costs only params + the warm jit cache).
+    autoscale: Optional[AutoscaleConfig] = None
 
 
 class _Replica:
@@ -184,7 +259,8 @@ class Fleet:
 
     def __init__(self, engines, fc: Optional[FleetConfig] = None, *,
                  restart_factory: Optional[
-                     Callable[[int], ServeEngine]] = None):
+                     Callable[[int], ServeEngine]] = None,
+                 tracker: Optional[Tracker] = None):
         self.fc = fc or FleetConfig()
         if isinstance(engines, ServeEngine):
             engines = [engines] * self.fc.num_engines
@@ -217,7 +293,18 @@ class Fleet:
             "migrations": 0, "retries": 0, "kills": 0,
             "hb_failovers": 0, "restarts": 0, "drains": 0,
             "hedges_dispatched": 0, "hedges_won": 0, "hedges_lost": 0,
+            "scale_ups": 0, "scale_downs": 0,
         }
+        # Observability: user-supplied tracker (optional); run() binds
+        # it to the fleet tick clock and attaches the TimelineWriter as
+        # one more sink of the same protocol.
+        self.tracker = tracker
+        self.trk: Tracker = NULL
+        self.timeline: Optional[TimelineWriter] = None
+        self.autoscaler = (Autoscaler(self.fc.autoscale)
+                           if self.fc.autoscale is not None else None)
+        self._as_last_retries = 0
+        self._tokens = 0  # cumulative canonical (frontier) tokens
 
     # -- session plumbing ----------------------------------------------
     def _open(self, rep: _Replica) -> None:
@@ -228,6 +315,10 @@ class Fleet:
             on_event=lambda rid, ev, detail, _e=eid: self._on_event(
                 _e, rid, ev, detail),
             rng=self._rng, fleet_mode=True,
+            # Per-replica child tracker: same sinks (timeline
+            # included), fleet tick clock, tagged engine=<eid> — the
+            # per-tick "engine" rows of the timeline schema.
+            tracker=self.trk.bind(engine=eid),
         )
         rep.closed = False
 
@@ -253,6 +344,7 @@ class Fleet:
         if prog == len(fr.tokens):
             # The frontier copy: this token index is new fleet-wide.
             fr.tokens.append(tok)
+            self._tokens += 1
             if fr.first_token_at < 0:
                 fr.first_token_at = self._tick + 1
             if self._on_token_user is not None:
@@ -560,6 +652,48 @@ class Fleet:
             elif rep.state != DRAINING:
                 rep.state = state
 
+    # -- autoscaling ----------------------------------------------------
+    def _alive(self) -> list:
+        return [r for r in self.replicas
+                if r.state in (LIVE, DEGRADED) and r.sess is not None]
+
+    def _autoscale(self, tick: int) -> None:
+        """One autoscaler decision per fleet tick: sustained overload
+        spawns a replica (restart_factory or shared engine object),
+        sustained idleness drains the newest LIVE replica through the
+        leak-checked retire path. Deterministic: signals and the tick
+        clock only."""
+        alive = self._alive()
+        sigs = [r.sess.signals() for r in alive]
+        backlog = (sum(s["queue_depth"] for s in sigs)
+                   + sum(1 for p in self._pending if p["at"] <= tick))
+        shed_delta = self.stats["retries"] - self._as_last_retries
+        self._as_last_retries = self.stats["retries"]
+        dec = self.autoscaler.decide(
+            tick, n_live=len(alive), signals=sigs,
+            backlog=backlog, shed_delta=shed_delta,
+        )
+        if dec == "up":
+            eid = len(self.replicas)
+            engine = (self.restart_factory(eid)
+                      if self.restart_factory is not None
+                      else self.replicas[0].engine)
+            rep = _Replica(eid, engine)
+            rep.last_hb = tick
+            self.replicas.append(rep)
+            self._open(rep)
+            self.stats["scale_ups"] += 1
+            self.trk.count("fleet.scale_ups", t=tick)
+            self.trk.event("scale_up", t=tick, engine=eid)
+        elif dec == "down":
+            victims = [r for r in self._alive() if r.state == LIVE]
+            if victims:
+                eid = max(r.eid for r in victims)  # newest first
+                self.drain(eid, tick)
+                self.stats["scale_downs"] += 1
+                self.trk.count("fleet.scale_downs", t=tick)
+                self.trk.event("scale_down", t=tick, engine=eid)
+
     # -- the run loop ---------------------------------------------------
     def run(self, requests: list, *, rng=None, on_token=None,
             on_event=None):
@@ -583,11 +717,19 @@ class Fleet:
         self._rng = rng
         self._on_token_user = on_token
         self._on_event_user = on_event
-        for rep in self.replicas:
-            self._open(rep)
+        # The timeline is one more sink of the tracker protocol; the
+        # fleet tracker binds the user's tracker (if any) to the fleet
+        # tick clock, so every exported row — engine and fleet alike —
+        # is stamped on the global tick, never wall-clock.
         tl = TimelineWriter(self.fc.timeline_path)
+        self.timeline = tl
+        base = self.tracker if self.tracker is not None else NULL
+        self.trk = base.bind(extra_sinks=(tl,),
+                             clock=lambda: self._tick)
         tick = 0
         try:
+            for rep in self.replicas:
+                self._open(rep)
             while len(self.finished) < len(self._reqs):
                 if tick >= self.fc.max_ticks:
                     raise RuntimeError(
@@ -601,6 +743,8 @@ class Fleet:
                         del self._restart_at[eid]
                         self._restart(eid, tick)
                 self._health(tick)
+                if self.autoscaler is not None:
+                    self._autoscale(tick)
                 self._dispatch(tick)
                 self._hedge(tick)
                 for rep in self.replicas:
@@ -616,7 +760,7 @@ class Fleet:
                     if rep.state == DRAINING and rep.sess is not None \
                             and not rep.sess.has_work:
                         self._retire(rep, tick)
-                tl.write(self._timeline_row(tick))
+                self.trk.row("fleet", **self._timeline_row(tick))
                 tick += 1
             # Drain survivors through the full close() contract: block
             # leak check + engine-local exactly-one-terminal audit.
@@ -662,9 +806,13 @@ class Fleet:
                 "pending": len(self._pending),
                 "inflight": inflight,
                 "finished": len(self.finished),
+                "tokens": self._tokens,
+                "replicas": len(self._alive()),
                 "migrations": self.stats["migrations"],
                 "retries": self.stats["retries"],
                 "hedges": self.stats["hedges_dispatched"],
+                "scale_ups": self.stats["scale_ups"],
+                "scale_downs": self.stats["scale_downs"],
             },
         }
 
@@ -699,10 +847,14 @@ class Fleet:
                 "won": self.stats["hedges_won"],
                 "lost": self.stats["hedges_lost"],
             },
-            "timeline_rows": len(tl.rows),
+            "timeline_rows": sum(1 for r in tl.rows
+                                 if r.get("kind", "fleet") == "fleet"),
+            "timeline_engine_rows": sum(1 for r in tl.rows
+                                        if r.get("kind") == "engine"),
             "timeline_path": self.fc.timeline_path,
+            "tokens": self._tokens,
             "engines": per_engine,
             **{k: self.stats[k] for k in
                ("migrations", "retries", "kills", "hb_failovers",
-                "restarts", "drains")},
+                "restarts", "drains", "scale_ups", "scale_downs")},
         }

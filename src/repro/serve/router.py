@@ -30,8 +30,9 @@ wins, ties broken by lowest engine id so replays are deterministic.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Optional
+
+from repro.obs.tracker import JsonlSink
 
 LIVE = "live"
 DEGRADED = "degraded"
@@ -115,14 +116,25 @@ class Router:
                    rc.retry_backoff * (2 ** attempt))
 
 
-class TimelineWriter:
+class TimelineWriter(JsonlSink):
     """Per-tick JSON-lines export of the fleet's routing signals — the
-    ROADMAP's "autoscaling triggers" artifact.
+    ROADMAP's "autoscaling triggers" artifact, now a kind-filtered
+    :class:`repro.obs.tracker.JsonlSink` of the tracker protocol.
 
-    Schema — one JSON object per fleet tick::
+    The timeline carries the two structured time-series row kinds
+    (anything else a shared tracker emits — spans, counters — is
+    filtered out so the artifact stays a pure time series):
+
+    ``{"kind": "engine", ...}`` — one row per LIVE replica per tick,
+    emitted by the replica's own session; schema documented in
+    ``repro/obs/README.md`` and on :mod:`repro.serve`.
+
+    ``{"kind": "fleet", ...}`` — one row per fleet tick::
 
         {
-          "tick": int,                # global fleet tick
+          "kind": "fleet",
+          "t": int,                   # global fleet tick (== "tick")
+          "tick": int,
           "engines": {                # one entry per replica (dead too)
             "<eid>": {
               "state": "live" | "degraded" | "draining" | "dead",
@@ -140,31 +152,38 @@ class TimelineWriter:
             "pending": int,           # requests awaiting (re)dispatch
             "inflight": int,          # requests with >= 1 live copy
             "finished": int,          # fleet-terminal so far
+            "tokens": int,            # cumulative canonical tokens
+            "replicas": int,          # live + degraded replica count
             "migrations": int,        # cumulative
             "retries": int,           # cumulative
-            "hedges": int             # cumulative hedge dispatches
+            "hedges": int,            # cumulative hedge dispatches
+            "scale_ups": int,         # cumulative autoscaler spawns
+            "scale_downs": int        # cumulative autoscaler drains
           }
         }
 
     An autoscaler watches ``queue_depth`` / ``occupancy`` /
     ``stall_ticks`` trends to add replicas, and ``state`` flips for
-    alerting. ``path=None`` keeps rows in memory only (tests read
-    ``.rows``); with a path, rows are appended to the file and also
-    kept in memory.
+    alerting (:class:`repro.serve.fleet.Autoscaler` consumes exactly
+    these signals). ``path=None`` keeps rows in memory only (tests
+    read ``.rows``); with a path, every row is written AND flushed
+    immediately — a crash mid-run loses nothing already emitted — and
+    rows are also kept in memory.
+
+    Lifecycle: a context manager; ``close`` is idempotent and the
+    ``with`` exit guarantees close-on-exception (the old
+    open-in-init/close-if-you-remember shape leaked the file handle
+    when a fleet run raised mid-trace).
     """
 
-    def __init__(self, path: Optional[str] = None):
-        self.path = path
-        self.rows: list[dict] = []
-        self._fh = open(path, "w") if path else None
+    KINDS = ("engine", "fleet")
+
+    def __init__(self, path: Optional[str] = None,
+                 kinds: tuple = KINDS):
+        super().__init__(path, keep_rows=True)
+        self.kinds = kinds
 
     def write(self, row: dict) -> None:
-        self.rows.append(row)
-        if self._fh is not None:
-            self._fh.write(json.dumps(row) + "\n")
-
-    def close(self) -> None:
-        if self._fh is not None:
-            self._fh.flush()
-            self._fh.close()
-            self._fh = None
+        if "kind" in row and row["kind"] not in self.kinds:
+            return
+        super().write(row)

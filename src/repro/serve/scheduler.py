@@ -71,6 +71,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+from repro.obs.tracker import NULL
 from repro.serve.paged_cache import BlockPool, _chain, blocks_needed
 
 FREE = "free"
@@ -243,6 +244,10 @@ class Scheduler:
         # Consecutive ticks the best visible entry sat block-starved
         # with a free slot (the backpressure / autoscaling signal).
         self.stall_ticks = 0
+        # Observability: the owning session points this at its
+        # Tracker; lifecycle counters (admissions, preemptions,
+        # terminal statuses) are emitted here, at the source.
+        self.tracker = NULL
 
     # -- submission -----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -332,6 +337,7 @@ class Scheduler:
                    reason=reason)
         self.finished[req.rid] = rec
         self.events.append((now, req.rid, status, reason))
+        self.tracker.count(f"serve.terminal.{status}", t=now)
 
     def _drop_entry(self, entry: _QEntry, now: int, status: str,
                     reason: str) -> None:
@@ -528,6 +534,7 @@ class Scheduler:
                 f"prefix_tokens={slot.prefix_tokens}"
                 + (f" inflight_blocks={len(pending)}" if pending else ""),
             ))
+            self.tracker.count("serve.admissions", t=now)
             out.append(slot)
         return out
 
@@ -640,6 +647,7 @@ class Scheduler:
             now, req.rid, "preempted-requeued",
             f"generated={slot.generated} cached={slot.length}",
         ))
+        self.tracker.count("serve.preemptions", t=now)
         if self.on_evict is not None:
             self.on_evict(slot)
         self._clear(slot)

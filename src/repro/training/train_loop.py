@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import DataIterator
+from repro.obs.tracker import NULL, Tracker
 from repro.models import model_zoo as zoo
 from repro.models import param as pm
 from repro.optim.base import Optimizer, apply_updates, global_norm
@@ -243,10 +244,16 @@ class Trainer:
     tc: TrainConfig = TrainConfig()
     preemption: Optional[PreemptionSignal] = None
     log_fn: Callable[[str], None] = print
+    # Observability: one "train" row per step (loss / ce / grad_norm /
+    # skipped_steps / step_ms) plus checkpoint retry/fallback counters
+    # — log_fn keeps the old print-style behaviour alongside.
+    tracker: Optional[Tracker] = None
 
     def __post_init__(self):
+        self.trk = self.tracker if self.tracker is not None else NULL
         self.manager = CheckpointManager(
-            self.ckpt_dir, max_to_keep=self.tc.max_to_keep
+            self.ckpt_dir, max_to_keep=self.tc.max_to_keep,
+            tracker=self.trk,
         )
         self._step_times: list[float] = []
 
@@ -276,7 +283,12 @@ class Trainer:
             batch = next(self.data)
             t0 = time.perf_counter()
             state, mets = train_step(state, batch)
-            jax.block_until_ready(mets["loss"])
+            # ONE host pull per step: device_get materialises every
+            # metric at once (blocking until the step finishes), so the
+            # guard, the tracker, and the log_every print below all
+            # read host floats — the old block_until_ready + repeated
+            # float(...) shape synced the device once per metric read.
+            mets = jax.device_get(mets)
             dt = time.perf_counter() - t0
             self._watchdog(i, dt)
             # Non-finite guard bookkeeping: "skipped" rides the metrics
@@ -305,6 +317,17 @@ class Trainer:
             else:
                 consecutive_skips = 0
             mets["skipped_steps"] = skipped_steps
+            # Tracker: every step, not just every log_every.
+            self.trk.row(
+                "train", t=i + 1,
+                loss=float(mets["loss"]), ce=float(mets["ce"]),
+                grad_norm=float(mets["grad_norm"]),
+                skipped=float(mets.get("skipped", 0.0)),
+                skipped_steps=skipped_steps,
+                step_ms=dt * 1e3,
+            )
+            if float(mets.get("skipped", 0.0)) > 0:
+                self.trk.count("train.skipped_steps", t=i + 1)
             if (i + 1) % self.tc.log_every == 0:
                 self.log_fn(
                     f"[trainer] step {i + 1} loss={float(mets['loss']):.4f} "

@@ -336,9 +336,14 @@ def test_fleet_timeline_and_stats_aggregation(granite, tmp_path):
     ))
     _outs, fin = fl.run([_req(r, arrival=r // 2) for r in range(8)])
     rows = [json.loads(line) for line in open(path)]
-    assert len(rows) == fl.last_stats["ticks"]
-    for i, row in enumerate(rows):
-        assert row["tick"] == i
+    # The timeline interleaves the two structured row kinds of the
+    # tracker protocol: per-replica "engine" rows + one "fleet" row
+    # per tick, all stamped on the fleet tick clock.
+    assert set(r["kind"] for r in rows) == {"engine", "fleet"}
+    frows = [r for r in rows if r["kind"] == "fleet"]
+    assert len(frows) == fl.last_stats["ticks"]
+    for i, row in enumerate(frows):
+        assert row["tick"] == i and row["t"] == i
         assert set(row["engines"]) == {"0", "1", "2"}
         for erow in row["engines"].values():
             assert erow["state"] in ("live", "degraded", "draining",
@@ -348,18 +353,28 @@ def test_fleet_timeline_and_stats_aggregation(granite, tmp_path):
                 for k in ("occupancy", "free_blocks", "queue_depth",
                           "active", "decoding", "stall_ticks"):
                     assert k in erow
-        for k in ("pending", "inflight", "finished", "migrations",
-                  "retries", "hedges"):
+        for k in ("pending", "inflight", "finished", "tokens",
+                  "replicas", "migrations", "retries", "hedges",
+                  "scale_ups", "scale_downs"):
             assert k in row["fleet"]
+    for erow in (r for r in rows if r["kind"] == "engine"):
+        assert erow["engine"] in (0, 1, 2)
+        for k in ("t", "occupancy", "free_blocks", "queue_depth",
+                  "active", "decoding", "stall_ticks", "tokens",
+                  "mixed_steps", "compiles"):
+            assert k in erow
     # the kill is visible in the timeline...
-    assert rows[-1]["engines"]["0"]["state"] == "dead"
-    assert rows[-1]["fleet"]["finished"] == 8
+    assert frows[-1]["engines"]["0"]["state"] == "dead"
+    assert frows[-1]["fleet"]["finished"] == 8
     # ...and the aggregation ties out against the run
     st = fl.last_stats
     assert st["mode"] == "fleet" and st["num_engines"] == 3
     assert sum(st["status_counts"].values()) == len(fin)
     assert set(st["engines"]) == {0, 1, 2}
-    assert st["timeline_rows"] == len(rows)
+    assert st["timeline_rows"] == len(frows)
+    assert st["timeline_engine_rows"] == len(rows) - len(frows)
+    # canonical token total matches the emitted outputs
+    assert st["tokens"] == frows[-1]["fleet"]["tokens"] > 0
     local_completed = sum(
         e["status_counts"].get("completed", 0)
         for e in st["engines"].values()
