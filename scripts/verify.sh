@@ -59,6 +59,15 @@ echo "[verify] fleet lane: multi-engine chaos sweep (REPRO_FLEET=1, wider seeds)
 # and every surviving pool passes its per-tick invariant audit).
 REPRO_FLEET=1 python -m pytest -x -q tests/test_fleet.py
 
+echo "[verify] train-chaos lane: self-healing trainer sweep (REPRO_TRAIN_CHAOS=1, wider seeds)"
+# tests/test_train_chaos.py runs in tier-1 above with a small seed
+# sweep; REPRO_TRAIN_CHAOS=1 widens the train-side fault-injection
+# sweep (injected loss spikes -> rollback + batch-window skip,
+# mid-run crashes -> bit-exact resume, preemption storms, transient +
+# corrupt checkpoint-store IO — trainer invariants audited every
+# step, deterministic_rows() bit-identical across replays).
+REPRO_TRAIN_CHAOS=1 python -m pytest -x -q tests/test_train_chaos.py
+
 echo "[verify] obs lane: JSONL-sink smoke serve + metric schema lint"
 # Runs a solo chunked serve, a 2-replica autoscaling fleet, and a
 # checkpoint-retry fault through a real JsonlSink, then cross-checks

@@ -64,8 +64,28 @@ class CheckpointManager:
         # restart pressure on the store shows up in the same JSONL
         # stream as serve/train metrics (obs/README.md).
         self.tracker = tracker if tracker is not None else NULL
+        # Store-health ledger: the same counts the tracker exports,
+        # plus a consecutive-failure streak, readable in-process via
+        # health() — Fleet restart decisions consult it before paying
+        # for a restore (ROADMAP: restarts must not ignore store
+        # health).
+        self.stats = {"io_retries": 0, "fallbacks": 0, "ops_ok": 0}
+        self._consecutive_failures = 0
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+
+    def health(self) -> dict:
+        """Point-in-time store health: cumulative retry/fallback counts
+        and the current consecutive-failure streak. ``healthy`` flips
+        False while attempts are failing back-to-back and recovers on
+        the next successful op."""
+        return {
+            "io_retries": self.stats["io_retries"],
+            "fallbacks": self.stats["fallbacks"],
+            "ops_ok": self.stats["ops_ok"],
+            "consecutive_failures": self._consecutive_failures,
+            "healthy": self._consecutive_failures == 0,
+        }
 
     # -- transient-IO retry ---------------------------------------------
     def _with_retries(self, op: str, fn: Callable[[], Any]) -> Any:
@@ -77,14 +97,19 @@ class CheckpointManager:
             try:
                 if self.fault_hook is not None:
                     self.fault_hook(op, attempt)
-                return fn()
+                out = fn()
+                self.stats["ops_ok"] += 1
+                self._consecutive_failures = 0
+                return out
             except ValueError:
                 raise
             except Exception as e:
+                self._consecutive_failures += 1
                 if attempt >= self.io_retries:
                     raise
                 delay = min(self.io_backoff_cap,
                             self.io_backoff * (2 ** attempt))
+                self.stats["io_retries"] += 1
                 self.tracker.count("checkpoint.io_retries")
                 print(
                     f"[checkpoint] {op} failed "
@@ -176,6 +201,8 @@ class CheckpointManager:
                 raise
             except Exception as e:  # torn/corrupt payload
                 last_err = e
+                self.stats["fallbacks"] += 1
+                self._consecutive_failures += 1
                 self.tracker.count("checkpoint.fallbacks")
                 print(
                     f"[checkpoint] step {step} at {path} is corrupt "

@@ -142,6 +142,18 @@ def is_valid(path: str) -> bool:
     return os.path.exists(os.path.join(path, "COMMIT"))
 
 
+def leaf_files(path: str) -> list:
+    """Absolute paths of the checkpoint's leaf payload files, in
+    manifest order. Used by fault-injection harnesses to tear a
+    COMMITted checkpoint (corruption is only discoverable at load)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    return [os.path.join(path, e["file"]) for e in manifest["leaves"]]
+
+
 def load_metadata(path: str) -> dict:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["metadata"]

@@ -27,6 +27,11 @@ class DataIterator:
     host_index: int = 0
     host_count: int = 1
     step: int = 0
+    # Batches fast-forwarded past without being consumed (PaLM-style
+    # divergence-rollback skips); bookkeeping only — the stream is a
+    # pure function of ``step``, so position + skip count is the whole
+    # story.
+    skipped_batches: int = 0
 
     def __iter__(self):
         return self
@@ -42,12 +47,23 @@ class DataIterator:
             }
         return batch
 
+    def skip(self, n: int) -> None:
+        """Fast-forward ``n`` batches without materialising them — the
+        batch window a divergence rollback retires never recurs."""
+        if n < 0:
+            raise ValueError(f"cannot skip a negative count: {n}")
+        self.step += n
+        self.skipped_batches += n
+
     # -- checkpointable state ------------------------------------------
     def state(self) -> dict:
-        return {"step": int(self.step)}
+        return {"step": int(self.step),
+                "skipped_batches": int(self.skipped_batches)}
 
     def restore(self, state: dict) -> None:
         self.step = int(state["step"])
+        # Older checkpoints predate skip bookkeeping.
+        self.skipped_batches = int(state.get("skipped_batches", 0))
 
 
 def make_iterator(

@@ -172,14 +172,20 @@ def main() -> None:
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
 
+    # ONE manager for the whole process: restart_factory restores
+    # through it, and its cumulative health() feeds the fleet's
+    # store-health-aware restart gate.
+    ckpt_mgr = None
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+
+        ckpt_mgr = CheckpointManager(args.ckpt_dir)
+
     def load_params():
         wrapped = zoo.init_params(jax.random.PRNGKey(0), cfg)
         p, _ = pm.split(wrapped)
-        if args.ckpt_dir:
-            from repro.checkpoint import CheckpointManager
-
-            mgr = CheckpointManager(args.ckpt_dir)
-            restored, step, _ = mgr.restore_latest({"params": p})
+        if ckpt_mgr is not None:
+            restored, step, _ = ckpt_mgr.restore_latest({"params": p})
             if restored is not None:
                 p = restored["params"]
                 print(f"[serve] loaded checkpoint step {step}")
@@ -256,7 +262,10 @@ def main() -> None:
                 timeline_path=args.fleet_timeline or None,
                 chaos=FleetChaosConfig(kills=kills) if kills else None,
                 autoscale=autoscale,
-            ), restart_factory=restart_factory, tracker=tracker)
+            ), restart_factory=restart_factory,
+               store_health=(ckpt_mgr.health if ckpt_mgr is not None
+                             else None),
+               tracker=tracker)
             outs, stats = fleet.run(reqs, on_token=on_token,
                                     on_event=on_event)
             for i, p in enumerate(demo):

@@ -61,6 +61,34 @@ def main() -> None:
     ap.add_argument("--obs-jsonl", default="", metavar="PATH",
                     help="stream per-step train rows + checkpoint "
                          "counters as JSONL (src/repro/obs/README.md)")
+    ap.add_argument("--spike-threshold", type=float, default=0.0,
+                    help="divergence detector: roll back when a finite "
+                         "loss exceeds this multiple of the trailing "
+                         "baseline (0 = detector off)")
+    ap.add_argument("--spike-window", type=int, default=32,
+                    help="trailing-loss window the spike baseline is "
+                         "computed over")
+    ap.add_argument("--spike-mode", default="median",
+                    choices=["median", "ewma"],
+                    help="spike baseline: median of the window (robust) "
+                         "or EWMA (tracks a falling curve tighter)")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="abort with the rollback history after this "
+                         "many divergence rollbacks")
+    ap.add_argument("--rollback-skip", type=int, default=8,
+                    help="batches to fast-forward past the offending "
+                         "batch after a rollback (PaLM-style skip)")
+    ap.add_argument("--rollback-lr-decay", type=float, default=1.0,
+                    help="LR multiplier applied for --rollback-cooldown "
+                         "steps after a rollback (1.0 = no decay)")
+    ap.add_argument("--rollback-cooldown", type=int, default=0,
+                    help="steps the post-rollback LR decay stays active")
+    ap.add_argument("--train-chaos", type=int, default=None,
+                    metavar="SEED",
+                    help="seeded train-side fault injection: loss "
+                         "spikes, transient store IO faults, preemption "
+                         "(repro.training.chaos; exercises the rollback "
+                         "+ resume machinery end to end)")
     args = ap.parse_args()
 
     from repro.configs import get_config, get_reduced
@@ -84,7 +112,14 @@ def main() -> None:
     opt = adafactor(inverse_sqrt(peak=args.peak_lr,
                                  warmup_steps=args.warmup))
     tc = TrainConfig(grad_accum=args.grad_accum,
-                     compression=args.compression)
+                     compression=args.compression,
+                     spike_threshold=args.spike_threshold,
+                     spike_window=args.spike_window,
+                     spike_mode=args.spike_mode,
+                     max_rollbacks=args.max_rollbacks,
+                     rollback_skip=args.rollback_skip,
+                     rollback_lr_decay=args.rollback_lr_decay,
+                     rollback_cooldown=args.rollback_cooldown)
     it = make_iterator(cfg, global_batch=args.batch, seq_len=args.seq)
 
     init_params = None
@@ -121,11 +156,22 @@ def main() -> None:
         from repro.obs import JsonlSink, Tracker
 
         tracker = Tracker((JsonlSink(args.obs_jsonl),))
+    chaos = None
+    if args.train_chaos is not None:
+        from repro.training.chaos import TrainChaosConfig
+
+        chaos = TrainChaosConfig(
+            seed=args.train_chaos, spike_prob=0.05,
+            io_fault_prob=0.2, preempt_prob=0.0,
+        )
     tr = Trainer(cfg, opt, it, args.ckpt_dir, ac=ac, tc=tc, preemption=sig,
-                 tracker=tracker)
+                 tracker=tracker, chaos=chaos)
     out = tr.run(args.steps, init_params=init_params)
     if tracker is not None:
         tracker.close()
+    if tr.stats.get("rollbacks"):
+        print(f"[train] survived {len(tr.stats['rollbacks'])} "
+              "divergence rollback(s)")
     print(f"[train] finished at step {int(out['state']['step'])}, "
           f"loss {float(out['metrics']['loss']):.4f}")
 

@@ -193,6 +193,15 @@ class FleetConfig:
     # comes from Fleet's restart_factory (restart-from-checkpoint) or
     # reuses the original engine object (params still resident).
     restart_after: int = 0
+    # Store-health-aware restarts: when a ``store_health`` probe is
+    # wired (launch/serve.py passes CheckpointManager.health), a due
+    # restart whose store is mid-failure is DEFERRED by store_backoff
+    # ticks instead of paying for a doomed restore — and after
+    # max_restart_deferrals consecutive deferrals the restart is
+    # REFUSED outright (the replica stays dead; restarting from a
+    # store that cannot serve reads would thrash forever).
+    store_backoff: int = 8
+    max_restart_deferrals: int = 5
     # JSONL routing-signal timeline (None = in-memory only; schema
     # documented on repro.serve.router.TimelineWriter).
     timeline_path: Optional[str] = None
@@ -260,6 +269,7 @@ class Fleet:
     def __init__(self, engines, fc: Optional[FleetConfig] = None, *,
                  restart_factory: Optional[
                      Callable[[int], ServeEngine]] = None,
+                 store_health: Optional[Callable[[], dict]] = None,
                  tracker: Optional[Tracker] = None):
         self.fc = fc or FleetConfig()
         if isinstance(engines, ServeEngine):
@@ -275,6 +285,11 @@ class Fleet:
         self.replicas = [_Replica(i, e) for i, e in enumerate(engines)]
         self.router = Router(self.fc.router)
         self.restart_factory = restart_factory
+        # Probe returning CheckpointManager.health()-shaped dicts; a
+        # restart-from-checkpoint consults it before rebuilding (see
+        # FleetConfig.store_backoff / max_restart_deferrals).
+        self.store_health = store_health
+        self._restart_deferrals: dict[int, int] = {}  # eid -> streak
         self.finished: dict[int, dict] = {}
         self.outs: dict[int, list] = {}
         self.last_stats: dict = {}
@@ -294,6 +309,7 @@ class Fleet:
             "hb_failovers": 0, "restarts": 0, "drains": 0,
             "hedges_dispatched": 0, "hedges_won": 0, "hedges_lost": 0,
             "scale_ups": 0, "scale_downs": 0,
+            "restart_deferrals": 0, "restart_refusals": 0,
         }
         # Observability: user-supplied tracker (optional); run() binds
         # it to the fleet tick clock and attaches the TimelineWriter as
@@ -598,6 +614,40 @@ class Fleet:
         rep.killed_at = tick
         rep.closed = True
 
+    def _restart_allowed(self, eid: int, tick: int) -> bool:
+        """Store-health gate for a due restart-from-checkpoint. A
+        restart that would hit a failing checkpoint store is deferred
+        (rescheduled ``store_backoff`` ticks out); once a replica has
+        been deferred ``max_restart_deferrals`` times in a row it is
+        refused — left dead rather than thrashing the store."""
+        if self.restart_factory is None or self.store_health is None:
+            return True  # no store involved / no probe wired
+        health = self.store_health()
+        if health.get("healthy", True):
+            self._restart_deferrals.pop(eid, None)
+            return True
+        streak = self._restart_deferrals.get(eid, 0) + 1
+        if streak > self.fc.max_restart_deferrals:
+            self._restart_deferrals.pop(eid, None)
+            self.stats["restart_refusals"] += 1
+            self.trk.count("fleet.restart_refusals", t=tick)
+            self.trk.event(
+                "restart_refused", t=tick, engine=eid,
+                deferrals=streak - 1,
+                consecutive_failures=int(
+                    health.get("consecutive_failures", -1)),
+            )
+            return False
+        self._restart_deferrals[eid] = streak
+        self._restart_at[eid] = tick + max(1, self.fc.store_backoff)
+        self.stats["restart_deferrals"] += 1
+        self.trk.count("fleet.restart_deferrals", t=tick)
+        self.trk.event(
+            "restart_deferred", t=tick, engine=eid, streak=streak,
+            retry_at=self._restart_at[eid],
+        )
+        return False
+
     def _restart(self, eid: int, tick: int) -> None:
         rep = self.replicas[eid]
         if self.restart_factory is not None:
@@ -741,7 +791,8 @@ class Fleet:
                 for eid, at in list(self._restart_at.items()):
                     if at <= tick:
                         del self._restart_at[eid]
-                        self._restart(eid, tick)
+                        if self._restart_allowed(eid, tick):
+                            self._restart(eid, tick)
                 self._health(tick)
                 if self.autoscaler is not None:
                     self._autoscale(tick)
@@ -856,5 +907,6 @@ class Fleet:
             "engines": per_engine,
             **{k: self.stats[k] for k in
                ("migrations", "retries", "kills", "hb_failovers",
-                "restarts", "drains", "scale_ups", "scale_downs")},
+                "restarts", "drains", "scale_ups", "scale_downs",
+                "restart_deferrals", "restart_refusals")},
         }

@@ -1,15 +1,37 @@
-"""Training loop: jitted train_step (grad accumulation, compression,
-remat), checkpoint/auto-resume, preemption handling.
+"""Self-healing training loop: jitted train_step (grad accumulation,
+compression, remat), divergence rollback, bit-exact crash-resume,
+preemption handling.
 
-``make_train_step`` builds a pure (state, batch) -> (state, metrics)
-function; distribution comes entirely from in/out shardings + the logical
-constraints inside the model (GSPMD) — the same function serves 1 CPU
-device and a 512-chip mesh.
+``make_train_step`` builds a pure (state, batch[, lr_scale]) ->
+(state, metrics) function; distribution comes entirely from in/out
+shardings + the logical constraints inside the model (GSPMD) — the same
+function serves 1 CPU device and a 512-chip mesh.
 
-``Trainer`` is the fault-tolerant driver: auto-resume from the newest
-valid checkpoint, periodic async saves, a preemption hook that triggers a
-final save + clean exit (the launcher restarts the job, which resumes),
-and a step-time watchdog for straggler diagnosis.
+``Trainer`` is the fault-tolerant driver. Failure modes it survives
+(the train-side mirror of the serve stack's table in
+``repro/serve/__init__.py``; overview in ``repro/training/__init__``):
+
+* **finite loss spike** (divergence) — the :class:`SpikeDetector`
+  flags ``loss > spike_threshold × trailing median``; the Trainer
+  restores the last known-good checkpoint, fast-forwards the data
+  iterator past the offending batch window (PaLM-style batch skip),
+  optionally decays the LR for a cooldown, and aborts with the full
+  rollback history after ``max_rollbacks``;
+* **NaN/inf loss** — the in-step non-finite guard drops the update
+  (params/opt state/residual keep their old values) at zero extra host
+  syncs; abort after ``max_consecutive_skips`` consecutive skips;
+* **crash / kill** — every checkpoint carries ALL resume-relevant
+  state (data-iterator position, skip counters, rollback history, LR
+  cooldown, detector window) so kill-at-step-k + auto-resume is
+  bit-identical to an uninterrupted run (tests/test_train_chaos.py);
+* **preemption** — cooperative SIGTERM: final blocking save + clean
+  exit; the restarted job resumes;
+* **flaky / corrupt checkpoint store** — the CheckpointManager retries
+  transient IO with capped backoff and ``restore_latest`` falls back
+  past torn payloads to the last known-good step.
+
+Fault injection for all of the above lives in
+``repro.training.chaos`` (:class:`TrainChaosConfig` + ``run_chaotic``).
 """
 from __future__ import annotations
 
@@ -30,6 +52,8 @@ from repro.models import param as pm
 from repro.optim.base import Optimizer, apply_updates, global_norm
 from repro.sharding import ShardCtx, act
 from repro.training import compression
+from repro.training.chaos import ChaosState, SimulatedCrash, TrainChaosConfig
+from repro.training.health import SpikeDetector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +72,25 @@ class TrainConfig:
     # a clear error after this many CONSECUTIVE skips. 0 disables the
     # guard entirely (step applies whatever it computed).
     max_consecutive_skips: int = 10
+    # Divergence (FINITE loss spike) detection + rollback. A loss >
+    # spike_threshold × trailing baseline (median of the last
+    # spike_window finite losses, armed after spike_min_history steps)
+    # triggers restore-from-last-known-good + a batch-window skip.
+    # 0.0 disables detection (default — short smoke runs with jumpy
+    # early losses opt in explicitly).
+    spike_threshold: float = 0.0
+    spike_window: int = 32
+    spike_min_history: int = 5
+    spike_mode: str = "median"  # median | ewma
+    # Rollback policy: skip the data stream to offending_batch +
+    # rollback_skip (the PaLM-style window skip — the bad batch never
+    # recurs), decay LR by rollback_lr_decay for rollback_cooldown
+    # steps after the restore, and abort with the full rollback
+    # history after max_rollbacks rollbacks.
+    max_rollbacks: int = 3
+    rollback_skip: int = 8
+    rollback_lr_decay: float = 1.0
+    rollback_cooldown: int = 0
 
 
 def make_train_step(
@@ -58,12 +101,18 @@ def make_train_step(
     ctx: Optional[ShardCtx] = None,
     tc: TrainConfig = TrainConfig(),
 ):
-    """Returns train_step(state, batch) -> (state, metrics).
+    """Returns train_step(state, batch[, lr_scale]) -> (state, metrics).
 
     Kernel implementations come from ``ac`` (ApplyCfg): the default
     "auto" resolves here — at step-build time, so the jitted step traces
     with a concrete choice — to the fused Pallas forward+backward kernels
     on TPU and the XLA einsum path on CPU.
+
+    ``lr_scale`` (optional traced scalar) multiplies the optimizer
+    updates — the post-rollback LR-cooldown knob. The Trainer always
+    passes it as a jnp scalar so the jitted step keeps ONE signature
+    (no retrace when the scale changes); omitting it traces without the
+    multiply, preserving the original two-arg call.
     """
     ac = ac.resolve()
 
@@ -73,7 +122,7 @@ def make_train_step(
         )(params, batch, cfg, ac=ac, ctx=ctx)
         return grads, mets
 
-    def train_step(state, batch):
+    def train_step(state, batch, lr_scale=None):
         params = state["params"]
         if tc.grad_accum > 1:
             def micro(carry, mb):
@@ -116,6 +165,8 @@ def make_train_step(
         updates, opt_state = optimizer.update(
             grads, state["opt_state"], params
         )
+        if lr_scale is not None:
+            updates = jax.tree.map(lambda u: u * lr_scale, updates)
         new_params = apply_updates(params, updates)
         mets = dict(mets)
         grad_norm = global_norm(grads)
@@ -245,17 +296,157 @@ class Trainer:
     preemption: Optional[PreemptionSignal] = None
     log_fn: Callable[[str], None] = print
     # Observability: one "train" row per step (loss / ce / grad_norm /
-    # skipped_steps / step_ms) plus checkpoint retry/fallback counters
-    # — log_fn keeps the old print-style behaviour alongside.
+    # skipped_steps / spike / rollbacks / lr_scale / step_ms) plus
+    # checkpoint retry/fallback counters — log_fn keeps the old
+    # print-style behaviour alongside.
     tracker: Optional[Tracker] = None
+    # Seeded fault injection (repro/training/chaos.py). chaos_state is
+    # harness-owned so its ledger survives simulated process crashes;
+    # a bare chaos config gets a private state.
+    chaos: Optional[TrainChaosConfig] = None
+    chaos_state: Optional[ChaosState] = None
 
     def __post_init__(self):
         self.trk = self.tracker if self.tracker is not None else NULL
+        if self.chaos is not None and self.chaos_state is None:
+            self.chaos_state = ChaosState(self.chaos)
         self.manager = CheckpointManager(
             self.ckpt_dir, max_to_keep=self.tc.max_to_keep,
             tracker=self.trk,
+            fault_hook=(self.chaos_state.fault_hook
+                        if self.chaos_state is not None else None),
         )
         self._step_times: list[float] = []
+        self.detector = SpikeDetector(
+            self.tc.spike_threshold, window=self.tc.spike_window,
+            min_history=self.tc.spike_min_history,
+            mode=self.tc.spike_mode,
+        )
+        self._skipped_steps = 0
+        self._consecutive_skips = 0
+        self._rollbacks: list[dict] = []
+        self._cooldown_left = 0
+        self.stats: dict = {}
+
+    # -- resume-relevant trainer state ----------------------------------
+    # Everything the loop needs beyond the param/opt tree rides in
+    # checkpoint metadata, so kill-at-step-k + resume replays
+    # bit-identically: data-iterator position (+ skip history), skip
+    # counters, rollback history, LR cooldown, detector window.
+    def _trainer_meta(self) -> dict:
+        return {
+            "skipped_steps": self._skipped_steps,
+            "consecutive_skips": self._consecutive_skips,
+            "rollbacks": list(self._rollbacks),
+            "cooldown_left": self._cooldown_left,
+            "detector": self.detector.state(),
+        }
+
+    def _restore_trainer_meta(self, meta: dict, *,
+                              keep_rollbacks: bool = False) -> None:
+        tm = meta.get("trainer", {})
+        self._skipped_steps = int(tm.get("skipped_steps", 0))
+        self._consecutive_skips = int(tm.get("consecutive_skips", 0))
+        if not keep_rollbacks:
+            self._rollbacks = list(tm.get("rollbacks", []))
+        self._cooldown_left = int(tm.get("cooldown_left", 0))
+        self.detector.restore(tm.get("detector", {}))
+
+    def _save(self, step: int, state, *, blocking: bool) -> None:
+        self.manager.save(
+            step, state,
+            metadata={"data": self.data.state(),
+                      "arch": self.cfg.name,
+                      "trainer": self._trainer_meta()},
+            blocking=blocking,
+        )
+
+    # -- divergence rollback --------------------------------------------
+    def _rollback(self, like, bad_step: int, bad_batch: int,
+                  obs_loss: float):
+        """Restore the last known-good checkpoint, rewind the trainer
+        bookkeeping to that checkpoint's view, and fast-forward the
+        data iterator past the offending batch window. Returns the
+        restored state tree."""
+        base = self.detector.baseline()
+        self.manager.wait()  # an async save may still be writing
+        restored, gstep, meta = self.manager.restore_latest(like)
+        if restored is None:
+            raise RuntimeError(
+                f"training diverged at step {bad_step} "
+                f"(loss={obs_loss:.6g}, baseline={base}) and no valid "
+                "checkpoint exists to roll back to — every candidate "
+                "was corrupt or missing"
+            )
+        # Rewind bookkeeping to the checkpoint's view — but the
+        # rollback HISTORY is cumulative across the run (the
+        # max_rollbacks bound must see every rollback, including ones
+        # newer than the restored step).
+        self.data.restore(meta.get("data", {"step": gstep}))
+        self._restore_trainer_meta(meta, keep_rollbacks=True)
+        # PaLM-style batch-window skip: the stream resumes PAST the
+        # offending batch, so a deterministic bad batch cannot re-fire.
+        skip_to = bad_batch + max(1, self.tc.rollback_skip)
+        if skip_to > self.data.step:
+            self.data.skip(skip_to - self.data.step)
+        self._cooldown_left = max(0, self.tc.rollback_cooldown)
+        rec = {
+            "step": int(bad_step),
+            "loss": float(obs_loss),
+            "baseline": None if base is None else float(base),
+            "restored_to": int(gstep),
+            "batch": int(bad_batch),
+            "data_skipped_to": int(self.data.step),
+        }
+        self._rollbacks.append(rec)
+        self.trk.count("train.rollbacks", t=bad_step)
+        self.trk.event("rollback", t=bad_step, **rec)
+        self.log_fn(
+            f"[trainer] step {bad_step} DIVERGED "
+            f"(loss={obs_loss:.4g} > {self.tc.spike_threshold:g}× "
+            f"baseline {0.0 if base is None else base:.4g}); rolled "
+            f"back to step {gstep}, data skipped to batch "
+            f"{self.data.step} ({len(self._rollbacks)}/"
+            f"{self.tc.max_rollbacks} rollbacks)"
+        )
+        return restored, gstep
+
+    def _abort_diverged(self, bad_step: int, obs_loss: float) -> None:
+        base = self.detector.baseline()
+        hist = "; ".join(
+            f"step {r['step']}: loss {r['loss']:.4g} -> restored to "
+            f"{r['restored_to']}, skipped to batch "
+            f"{r['data_skipped_to']}" for r in self._rollbacks
+        )
+        raise RuntimeError(
+            f"training diverged: loss spike at step {bad_step} "
+            f"(loss={obs_loss:.6g} > {self.tc.spike_threshold:g}× "
+            f"baseline {0.0 if base is None else base:.6g}) after "
+            f"{len(self._rollbacks)} rollbacks "
+            f"[{hist}] — lower the learning rate, widen "
+            "rollback_skip past the bad data window, or raise router "
+            "z-loss before resuming"
+        )
+
+    # -- chaos audit -----------------------------------------------------
+    def audit(self, step: int) -> None:
+        """Per-step invariant audit (chaos harness): bookkeeping the
+        self-healing machinery relies on must hold after every step,
+        rollback, resume, and fault."""
+        assert len(self.detector.history) <= self.detector.window
+        assert len(self._rollbacks) <= self.tc.max_rollbacks
+        assert 0 <= self._cooldown_left <= max(
+            0, self.tc.rollback_cooldown)
+        assert self.data.step >= step, (
+            f"data iterator at batch {self.data.step} is behind "
+            f"optimizer step {step}"
+        )
+        steps = self.manager.all_steps()
+        assert steps == sorted(set(steps))
+        assert self._consecutive_skips <= self._skipped_steps \
+            or self._skipped_steps == 0
+        if self.chaos_state is not None:
+            self.chaos_state.audits += 1
 
     def run(self, num_steps: int, *, rng=None, init_params=None) -> dict:
         rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -267,6 +458,7 @@ class Trainer:
         if restored is not None:
             state = restored
             self.data.restore(meta.get("data", {"step": step0}))
+            self._restore_trainer_meta(meta)
             self.log_fn(f"[trainer] resumed from step {step0}")
         train_step = jax.jit(
             make_train_step(
@@ -275,14 +467,24 @@ class Trainer:
             ),
             donate_argnums=(0,),
         )
+        self._train_step = train_step
+        # Rollback anchor: divergence before the first periodic save
+        # still needs a known-good restore target.
+        if self.detector.enabled and self.manager.latest_step() is None:
+            self._save(0, state, blocking=True)
         mets = {}
-        start_step = int(state["step"])
-        skipped_steps = 0
-        consecutive_skips = 0
-        for i in range(start_step, num_steps):
+        step = int(state["step"])
+        while step < num_steps:
+            i = step
             batch = next(self.data)
+            bidx = self.data.step - 1  # index of the batch just consumed
+            lr_scale = (self.tc.rollback_lr_decay
+                        if self._cooldown_left > 0 else 1.0)
             t0 = time.perf_counter()
-            state, mets = train_step(state, batch)
+            # lr_scale rides as a TRACED jnp scalar: one jit signature
+            # for the whole run — cooldown decay never retraces.
+            state, mets = train_step(state, batch,
+                                     jnp.float32(lr_scale))
             # ONE host pull per step: device_get materialises every
             # metric at once (blocking until the step finishes), so the
             # guard, the tracker, and the log_every print below all
@@ -291,22 +493,27 @@ class Trainer:
             mets = jax.device_get(mets)
             dt = time.perf_counter() - t0
             self._watchdog(i, dt)
+            obs_loss = float(mets["loss"])
+            if self.chaos_state is not None \
+                    and self.chaos_state.spike_at(bidx):
+                obs_loss = obs_loss * self.chaos.spike_scale
+            skipped = float(mets.get("skipped", 0.0)) > 0
             # Non-finite guard bookkeeping: "skipped" rides the metrics
             # pull the loop already blocks on — no extra syncs.
-            if float(mets.get("skipped", 0.0)) > 0:
-                skipped_steps += 1
-                consecutive_skips += 1
+            if skipped:
+                self._skipped_steps += 1
+                self._consecutive_skips += 1
                 self.log_fn(
                     f"[trainer] step {i + 1} SKIPPED non-finite update "
                     f"(loss={float(mets['loss'])}, "
                     f"grad_norm={float(mets['grad_norm'])}; "
-                    f"{consecutive_skips} consecutive)"
+                    f"{self._consecutive_skips} consecutive)"
                 )
                 if (self.tc.max_consecutive_skips > 0
-                        and consecutive_skips
+                        and self._consecutive_skips
                         >= self.tc.max_consecutive_skips):
                     raise RuntimeError(
-                        f"training diverged: {consecutive_skips} "
+                        f"training diverged: {self._consecutive_skips} "
                         "consecutive non-finite losses (last loss="
                         f"{float(mets['loss'])}, grad_norm="
                         f"{float(mets['grad_norm'])}) — lower the "
@@ -315,40 +522,78 @@ class Trainer:
                         "data seed"
                     )
             else:
-                consecutive_skips = 0
-            mets["skipped_steps"] = skipped_steps
-            # Tracker: every step, not just every log_every.
+                self._consecutive_skips = 0
+            mets["skipped_steps"] = self._skipped_steps
+            spike = (not skipped) and self.detector.is_spike(obs_loss)
+            # Tracker: every step, not just every log_every — spike
+            # steps included (their row precedes the rollback).
             self.trk.row(
                 "train", t=i + 1,
-                loss=float(mets["loss"]), ce=float(mets["ce"]),
+                loss=obs_loss, ce=float(mets["ce"]),
                 grad_norm=float(mets["grad_norm"]),
                 skipped=float(mets.get("skipped", 0.0)),
-                skipped_steps=skipped_steps,
+                skipped_steps=self._skipped_steps,
+                spike=float(spike),
+                rollbacks=len(self._rollbacks),
+                lr_scale=lr_scale,
                 step_ms=dt * 1e3,
             )
-            if float(mets.get("skipped", 0.0)) > 0:
+            if skipped:
                 self.trk.count("train.skipped_steps", t=i + 1)
-            if (i + 1) % self.tc.log_every == 0:
+            if spike:
+                # Divergence: restore last-known-good + batch-window
+                # skip, or abort with the full history once the
+                # rollback budget is spent.
+                if len(self._rollbacks) >= self.tc.max_rollbacks:
+                    self._abort_diverged(i + 1, obs_loss)
+                state, step = self._rollback(state, i + 1, bidx,
+                                             obs_loss)
+                if self.chaos is not None and self.chaos.audit:
+                    self.audit(step)
+                continue
+            self.detector.update(obs_loss)
+            if self._cooldown_left > 0:
+                self._cooldown_left -= 1
+            step = i + 1
+            if step % self.tc.log_every == 0:
                 self.log_fn(
-                    f"[trainer] step {i + 1} loss={float(mets['loss']):.4f} "
+                    f"[trainer] step {step} loss={float(mets['loss']):.4f} "
                     f"ce={float(mets['ce']):.4f} {dt * 1e3:.0f}ms"
                 )
-            want_ckpt = (i + 1) % self.tc.checkpoint_every == 0
+            if self.chaos_state is not None and self.preemption is not None \
+                    and self.chaos_state.preempt_at(step):
+                self.preemption.trigger()
+            # A chaos crash fires BEFORE this step's checkpoint — the
+            # worst case: everything since the last save is lost and
+            # must replay bit-identically on resume.
+            if self.chaos_state is not None \
+                    and self.chaos_state.crash_at(step):
+                raise SimulatedCrash(f"chaos: crash after step {step}")
+            want_ckpt = step % self.tc.checkpoint_every == 0
             if want_ckpt or self.preemption:
-                self.manager.save(
-                    i + 1, state,
-                    metadata={"data": self.data.state(),
-                              "arch": self.cfg.name},
-                    blocking=bool(self.preemption),
-                )
+                self._save(step, state, blocking=bool(self.preemption))
+                if self.chaos_state is not None:
+                    self.chaos_state.maybe_corrupt(self.manager, step)
+            if self.chaos is not None and self.chaos.audit:
+                self.audit(step)
             if self.preemption:
                 self.log_fn(
-                    f"[trainer] preempted at step {i + 1}; "
+                    f"[trainer] preempted at step {step}; "
                     "checkpoint saved, exiting cleanly"
                 )
                 break
         self.manager.wait()
-        return {"state": state, "metrics": mets}
+        self.stats = {
+            "skipped_steps": self._skipped_steps,
+            "rollbacks": list(self._rollbacks),
+            "cooldown_left": self._cooldown_left,
+            "resumed_from": step0,
+            # Rollback restores state without retracing: ONE signature
+            # for the whole run, rollbacks and LR cooldowns included.
+            "compile_count": train_step._cache_size(),
+            "store": self.manager.health(),
+        }
+        return {"state": state, "metrics": mets, "stats": self.stats}
 
     def _watchdog(self, step: int, dt: float) -> None:
         self._step_times.append(dt)

@@ -241,3 +241,44 @@ def test_manager_never_retries_structure_mismatch(tmp_path):
     assert [c for c in hook.calls if c[0] == "restore"] == [
         ("restore", 0)
     ]
+
+
+def test_manager_health_tracks_failures_and_recovery(tmp_path):
+    """health(): cumulative retry/fallback counts plus a
+    consecutive-failure streak that clears on the next successful op."""
+    CheckpointManager(str(tmp_path)).save(1, {"x": np.arange(4.0)})
+    down = {"on": False}
+
+    def hook(op, attempt):
+        if down["on"]:
+            raise OSError("store down")
+
+    m = CheckpointManager(str(tmp_path), io_retries=1, fault_hook=hook,
+                          sleep=lambda s: None)
+    h0 = m.health()
+    assert h0["healthy"] and h0["io_retries"] == 0 \
+        and h0["fallbacks"] == 0
+    _, step, _ = m.restore_latest({"x": np.zeros(4)})
+    assert step == 1 and m.health()["ops_ok"] == 1
+    down["on"] = True
+    assert m.restore_latest({"x": np.zeros(4)}) == (None, None, None)
+    h1 = m.health()
+    assert not h1["healthy"] and h1["consecutive_failures"] > 0
+    assert h1["io_retries"] >= 1 and h1["fallbacks"] == 1
+    down["on"] = False
+    _, step, _ = m.restore_latest({"x": np.zeros(4)})
+    assert step == 1
+    h2 = m.health()
+    assert h2["healthy"] and h2["consecutive_failures"] == 0
+    # cumulative counts survive recovery (the fleet gate keys off the
+    # streak, not the totals)
+    assert h2["fallbacks"] == 1
+
+
+def test_store_leaf_files(tmp_path):
+    path = str(tmp_path / "ck")
+    save_tree(path, {"a": np.arange(3.0), "b": np.ones((2, 2))})
+    files = store.leaf_files(path)
+    assert len(files) == 2
+    assert all(os.path.exists(f) for f in files)
+    assert store.leaf_files(str(tmp_path / "nope")) == []

@@ -388,3 +388,91 @@ def test_fleet_rejects_per_request_callbacks(granite):
     bad = _req(0, on_token=lambda rid, tok: None)
     with pytest.raises(ValueError, match="per-request callbacks"):
         fl.run([bad])
+
+
+# -- store-health-aware restarts ------------------------------------------
+
+
+def test_fleet_restart_refused_while_store_failing(granite, tmp_path):
+    """A due restart-from-checkpoint consults store health: with every
+    store op failing (injected fault hook), the restart is deferred
+    store_backoff ticks at a time and, once the deferral budget is
+    spent, refused — the factory is never invoked against a dead
+    store and the survivor finishes the work."""
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+
+    CheckpointManager(str(tmp_path)).save(1, {"x": np.ones(4)})
+
+    def always_down(op, attempt):
+        raise OSError("store down")
+
+    mgr = CheckpointManager(str(tmp_path), io_retries=1,
+                            fault_hook=always_down,
+                            sleep=lambda s: None)
+    # the failed restore that marks the store unhealthy (the launcher's
+    # load_params path)
+    assert mgr.restore_latest({"x": np.ones(4)}) == (None, None, None)
+    assert mgr.health()["healthy"] is False
+    eng = _engine(granite)
+    built = []
+
+    def factory(eid):
+        built.append(eid)
+        return eng
+
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2, restart_after=2, store_backoff=1,
+        max_restart_deferrals=2,
+        chaos=FleetChaosConfig(seed=5, kills=((2, 1),)),
+    ), restart_factory=factory, store_health=mgr.health)
+    outs, fin = fl.run([_req(r, arrival=r) for r in range(8)])
+    assert built == []
+    assert fl.last_stats["restarts"] == 0
+    assert fl.last_stats["restart_deferrals"] == 2
+    assert fl.last_stats["restart_refusals"] == 1
+    assert all(rec["status"] == "completed" for rec in fin.values())
+
+
+def test_fleet_restart_deferred_until_store_recovers(granite):
+    """A transiently unhealthy store defers the restart; once the
+    health probe recovers the replica rejoins normally."""
+    eng = _engine(granite)
+    built = []
+
+    def factory(eid):
+        built.append(eid)
+        return eng
+
+    probes = []
+
+    def store_health():
+        probes.append(1)
+        return {"healthy": len(probes) > 2, "consecutive_failures":
+                0 if len(probes) > 2 else 3}
+
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2, restart_after=2, store_backoff=2,
+        max_restart_deferrals=10,
+        chaos=FleetChaosConfig(seed=5, kills=((2, 1),)),
+    ), restart_factory=factory, store_health=store_health)
+    outs, fin = fl.run([_req(r, arrival=r) for r in range(8)])
+    assert built == [1]
+    assert fl.last_stats["restarts"] == 1
+    assert fl.last_stats["restart_deferrals"] == 2
+    assert fl.last_stats["restart_refusals"] == 0
+    assert all(rec["status"] == "completed" for rec in fin.values())
+
+
+def test_fleet_no_store_probe_restarts_unconditionally(granite):
+    """Without a store_health probe (or without a restart_factory) the
+    gate is a no-op — PR 8 behaviour unchanged."""
+    eng = _engine(granite)
+    fl = Fleet(eng, FleetConfig(
+        num_engines=2, restart_after=3,
+        chaos=FleetChaosConfig(seed=5, kills=((2, 1),)),
+    ), restart_factory=lambda eid: eng)
+    outs, fin = fl.run([_req(r, arrival=r) for r in range(8)])
+    assert fl.last_stats["restarts"] == 1
+    assert fl.last_stats["restart_deferrals"] == 0

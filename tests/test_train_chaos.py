@@ -1,0 +1,268 @@
+"""Self-healing Trainer: divergence rollback, bit-exact crash-resume,
+and the seeded train-side chaos harness.
+
+REPRO_TRAIN_CHAOS=1 widens the seeded fault sweep (verify.sh lane).
+"""
+import math
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import make_iterator
+from repro.obs import MemorySink, Tracker, deterministic_rows
+from repro.training import (
+    ChaosState,
+    SpikeDetector,
+    TrainChaosConfig,
+    TrainConfig,
+    Trainer,
+    run_chaotic,
+)
+from repro.optim import adafactor, constant
+from repro.training.train_loop import PreemptionSignal
+
+CHAOS_SEEDS = range(3) if os.environ.get("REPRO_TRAIN_CHAOS") else [0]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("tinyllama-1.1b")
+
+
+def _make(cfg, d, tc, *, chaos=None, state=None, sink=None,
+          preemption=None):
+    it = make_iterator(cfg, global_batch=4, seq_len=32, host_index=0,
+                       host_count=1)
+    trk = Tracker((sink,)) if sink is not None else None
+    return Trainer(cfg, adafactor(constant(1e-3)), it, str(d), tc=tc,
+                   log_fn=lambda s: None, tracker=trk, chaos=chaos,
+                   chaos_state=state, preemption=preemption)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype
+        np.testing.assert_array_equal(xa, ya)
+
+
+def _last_train_rows(rows):
+    """Last emission per step t: the crash-replayed prefix of a resumed
+    run re-emits rows for steps it replays — the final word per step is
+    what must match the uninterrupted run."""
+    out = {}
+    for r in deterministic_rows(rows):
+        if r.get("kind") == "train":
+            out[r["t"]] = r
+    return out
+
+
+# -- SpikeDetector units ---------------------------------------------------
+
+
+def test_spike_detector_arms_and_flags():
+    d = SpikeDetector(3.0, min_history=3)
+    assert d.enabled and not d.armed
+    assert not d.is_spike(1e9)  # unarmed: never fires
+    for x in (1.0, 1.2, 0.8):
+        d.update(x)
+    assert d.armed and d.baseline() == 1.0  # median
+    assert d.is_spike(3.1) and not d.is_spike(2.9)
+    assert not d.is_spike(float("nan"))  # non-finite guard's job
+    d.update(float("inf"))  # non-finite never enters the window
+    assert len(d.history) == 3
+
+
+def test_spike_detector_disabled_and_modes():
+    off = SpikeDetector(0.0)
+    for x in (1.0, 1.0, 1.0, 1.0, 1.0):
+        off.update(x)
+    assert not off.enabled and not off.is_spike(1e9)
+    ew = SpikeDetector(2.0, min_history=2, mode="ewma", ewma=0.5)
+    ew.update(4.0)
+    ew.update(2.0)
+    assert ew.baseline() == pytest.approx(3.0)
+    with pytest.raises(ValueError, match="mode"):
+        SpikeDetector(1.0, mode="mean")
+
+
+def test_spike_detector_state_roundtrip():
+    d = SpikeDetector(3.0, min_history=2)
+    for x in (2.0, 3.0, 4.0):
+        d.update(x)
+    d2 = SpikeDetector(3.0, min_history=2)
+    d2.restore(d.state())
+    assert d2.history == d.history
+    assert d2.baseline() == d.baseline()
+    d3 = SpikeDetector(3.0)
+    d3.restore({})  # pre-detector checkpoints
+    assert d3.history == []
+
+
+# -- divergence rollback ---------------------------------------------------
+
+
+def test_injected_spike_triggers_exactly_one_rollback(cfg, tmp_path):
+    """Acceptance: a seeded injected loss spike triggers exactly one
+    rollback + batch-window skip, the run completes with finite loss,
+    and compile_count does not regress (no retrace on rollback or
+    LR cooldown)."""
+    tc = TrainConfig(checkpoint_every=4, log_every=1000,
+                     spike_threshold=3.0, spike_min_history=3,
+                     max_rollbacks=2, rollback_skip=4,
+                     rollback_lr_decay=0.5, rollback_cooldown=3)
+    chaos = TrainChaosConfig(seed=0, spike_batches=(9,))
+    sink = MemorySink()
+    out, st = run_chaotic(
+        lambda ch, s: _make(cfg, tmp_path, tc, chaos=ch, state=s,
+                            sink=sink),
+        14, chaos)
+    assert int(out["state"]["step"]) == 14
+    assert math.isfinite(float(out["metrics"]["loss"]))
+    assert st.spikes == 1
+    rbs = out["stats"]["rollbacks"]
+    assert len(rbs) == 1
+    rb = rbs[0]
+    assert rb["step"] == 10 and rb["batch"] == 9
+    assert rb["restored_to"] == 8  # last checkpoint before the spike
+    assert rb["data_skipped_to"] == 9 + tc.rollback_skip
+    # one jit signature for the whole run, rollback + cooldown included
+    assert out["stats"]["compile_count"] == 1
+    rows = deterministic_rows(sink.rows)
+    spikes = [r for r in rows if r.get("kind") == "train"
+              and r.get("spike")]
+    assert len(spikes) == 1 and spikes[0]["t"] == 10
+    assert any(r.get("kind") == "event" and r.get("name") == "rollback"
+               for r in rows)
+    assert any(r.get("kind") == "counter"
+               and r.get("name") == "train.rollbacks" for r in rows)
+    # LR cooldown visible on the post-rollback rows, then expires
+    cool = [r for r in rows if r.get("kind") == "train"
+            and r.get("lr_scale") == 0.5]
+    assert len(cool) == tc.rollback_cooldown
+
+
+def test_rollback_budget_exhausted_aborts_with_history(cfg, tmp_path):
+    tc = TrainConfig(checkpoint_every=4, log_every=1000,
+                     spike_threshold=3.0, spike_min_history=3,
+                     max_rollbacks=1, rollback_skip=1)
+    chaos = TrainChaosConfig(seed=0, spike_batches=(6, 7), max_spikes=4)
+    st = ChaosState(chaos)
+    tr = _make(cfg, tmp_path, tc, chaos=chaos, state=st)
+    with pytest.raises(RuntimeError, match="after 1 rollbacks"):
+        tr.run(14)
+    tr.manager.wait()
+    assert len(tr.stats.get("rollbacks", tr._rollbacks)) >= 1
+    assert st.spikes == 2
+
+
+def test_rollback_without_any_checkpoint_diagnoses(cfg, tmp_path):
+    """The step-0 rollback anchor guarantees a restore target even when
+    the spike lands before the first periodic checkpoint."""
+    tc = TrainConfig(checkpoint_every=1000, log_every=1000,
+                     spike_threshold=3.0, spike_min_history=3,
+                     max_rollbacks=2, rollback_skip=2)
+    chaos = TrainChaosConfig(seed=0, spike_batches=(4,))
+    out, st = run_chaotic(
+        lambda ch, s: _make(cfg, tmp_path, tc, chaos=ch, state=s),
+        8, chaos)
+    assert int(out["state"]["step"]) == 8
+    assert out["stats"]["rollbacks"][0]["restored_to"] == 0
+
+
+# -- bit-exact crash-resume ------------------------------------------------
+
+
+@pytest.mark.parametrize("grad_accum,compression", [
+    (1, "none"), (2, "none"), (1, "bf16")])
+def test_crash_resume_is_bit_exact(cfg, tmp_path, grad_accum,
+                                   compression):
+    """Kill-at-step-k + auto-resume == the uninterrupted run: params,
+    opt state (full tree, bitwise) and the per-step train rows'
+    deterministic projection."""
+    tc = TrainConfig(checkpoint_every=3, log_every=1000,
+                     grad_accum=grad_accum, compression=compression)
+    a_sink = MemorySink()
+    out_a = _make(cfg, tmp_path / "straight", tc, sink=a_sink).run(8)
+    b_sink = MemorySink()
+    chaos = TrainChaosConfig(seed=1, crash_steps=(5,))
+    out_b, st = run_chaotic(
+        lambda ch, s: _make(cfg, tmp_path / "crash", tc, chaos=ch,
+                            state=s, sink=b_sink),
+        8, chaos)
+    assert st.crashes == 1 and st.rebuilds == 1
+    _leaves_equal(out_a["state"], out_b["state"])
+    ra, rb = _last_train_rows(a_sink.rows), _last_train_rows(b_sink.rows)
+    assert set(ra) == set(rb) == set(range(1, 9))
+    for t in ra:
+        assert ra[t] == rb[t], f"train row diverged at step {t}"
+
+
+def test_preemption_storm_bit_exact(cfg, tmp_path):
+    """Repeated preempt (save + clean exit) + restart converges to the
+    same final state as an uninterrupted run."""
+    tc = TrainConfig(checkpoint_every=100, log_every=1000)
+    out_a = _make(cfg, tmp_path / "straight", tc).run(9)
+    chaos = TrainChaosConfig(seed=2, preempt_steps=(2, 5),
+                             max_preempts=4)
+    out_b, st = run_chaotic(
+        lambda ch, s: _make(cfg, tmp_path / "storm", tc, chaos=ch,
+                            state=s, preemption=PreemptionSignal()),
+        9, chaos)
+    assert st.preempts == 2 and st.rebuilds == 2
+    assert int(out_b["state"]["step"]) == 9
+    _leaves_equal(out_a["state"], out_b["state"])
+
+
+def test_crash_resume_survives_corrupt_and_transient_store(cfg,
+                                                           tmp_path):
+    """Transient IO faults are absorbed by the retry path, a
+    corrupted-after-COMMIT checkpoint falls back to the previous step,
+    and the replay is still bit-exact."""
+    tc = TrainConfig(checkpoint_every=3, log_every=1000)
+    out_a = _make(cfg, tmp_path / "straight", tc).run(10)
+    chaos = TrainChaosConfig(seed=3, crash_steps=(7,),
+                             io_fault_prob=1.0, max_io_faults=100,
+                             corrupt_steps=(6,))
+    out_b, st = run_chaotic(
+        lambda ch, s: _make(cfg, tmp_path / "chaos", tc, chaos=ch,
+                            state=s),
+        10, chaos)
+    assert st.crashes == 1 and st.corrupts == 1 and st.io_faults > 0
+    _leaves_equal(out_a["state"], out_b["state"])
+    # the resume actually took the fallback path (step 6 was torn)
+    assert out_b["stats"]["store"]["fallbacks"] >= 1
+
+
+# -- whole-harness determinism ---------------------------------------------
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_identical_chaos_runs_bit_identical_rows(cfg, tmp_path, seed):
+    """Acceptance: two identical seeded chaos runs produce bit-identical
+    deterministic_rows() projections (crash replays included)."""
+    tc = TrainConfig(checkpoint_every=3, log_every=1000,
+                     spike_threshold=3.0, spike_min_history=3,
+                     max_rollbacks=3, rollback_skip=3)
+    chaos = TrainChaosConfig(seed=seed, spike_batches=(7,),
+                             crash_steps=(9,), io_fault_prob=0.5,
+                             max_io_faults=100)
+    outs = []
+    for name in ("one", "two"):
+        sink = MemorySink()
+        out, st = run_chaotic(
+            lambda ch, s: _make(cfg, tmp_path / f"{name}{seed}", tc,
+                                chaos=ch, state=s, sink=sink),
+            12, chaos)
+        assert int(out["state"]["step"]) == 12
+        assert st.audits > 0
+        outs.append((out, deterministic_rows(sink.rows)))
+    (out1, rows1), (out2, rows2) = outs
+    _leaves_equal(out1["state"], out2["state"])
+    assert out1["chaos"] == out2["chaos"]
+    assert rows1 == rows2

@@ -152,3 +152,27 @@ def test_compression_in_train_step(cfg):
     # residual got populated
     r = max(float(jnp.abs(x).max()) for x in jax.tree.leaves(s1["residual"]))
     assert r > 0
+
+
+def test_skip_counters_survive_resume(cfg, tmp_path):
+    """Regression: skipped_steps / consecutive_skips ride checkpoint
+    metadata — a restart between non-finite steps must keep counting
+    toward max_consecutive_skips instead of resetting to zero."""
+    opt = sgd(constant(0.1), momentum=0.0)
+    tc = TrainConfig(checkpoint_every=2, log_every=1000,
+                     max_consecutive_skips=4)
+    it = make_iterator(cfg, global_batch=4, seq_len=32, host_index=0,
+                       host_count=1)
+    tr = Trainer(cfg, opt, it, str(tmp_path), tc=tc,
+                 log_fn=lambda s: None)
+    out = tr.run(2, init_params=_nan_params(cfg, opt))
+    assert out["metrics"]["skipped_steps"] == 2
+    it2 = make_iterator(cfg, global_batch=4, seq_len=32, host_index=0,
+                        host_count=1)
+    tr2 = Trainer(cfg, opt, it2, str(tmp_path), tc=tc,
+                  log_fn=lambda s: None)
+    # resumed run inherits 2 consecutive skips (NaN params persisted in
+    # the checkpoint keep producing them): 2 more steps reach the abort
+    # threshold of 4 — the pre-fix behaviour needed 4 fresh ones
+    with pytest.raises(RuntimeError, match="4 consecutive non-finite"):
+        tr2.run(10)
